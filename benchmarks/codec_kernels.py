@@ -1,0 +1,65 @@
+"""Codec compression-ratio table (paper §4 uses OptPFOR) + kernel micro-bench
+(interpret-mode wall time is NOT a TPU number — correctness/plumbing only;
+TPU perf comes from the §Roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import CorpusConfig
+from repro.data.corpus import synthesize_corpus
+from repro.index.build import build_inverted_index
+from repro.index.compress import CODECS, compressed_size_bits, index_size_bits
+
+
+def codec_rows():
+    corpus = synthesize_corpus(CorpusConfig(n_docs=4000, n_terms=30000, avg_doc_len=120, seed=4))
+    inv = build_inverted_index(corpus)
+    raw_bits = inv.n_postings * 32
+    rows = []
+    for codec in CODECS:
+        t0 = time.time()
+        sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec)
+        dt = (time.time() - t0) * 1e6
+        ratio = raw_bits / max(1, int(sizes.sum()))
+        bpp = sizes.sum() / inv.n_postings
+        rows.append((f"codec/{codec}", dt, f"ratio_vs_raw32={ratio:.2f} bits_per_posting={bpp:.2f}"))
+    return rows
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def kernel_rows():
+    from repro.kernels.membership.kernel import membership_bitmask, Q_BLK, D_BLK
+    from repro.kernels.bitset.kernel import bitset_and_popcount, W_BLK
+    from repro.kernels.pfor.kernel import unpack_blocks
+    from repro.kernels.pfor.ref import words_per_block
+
+    rng = np.random.default_rng(0)
+    rows = []
+    q = jnp.asarray(rng.standard_normal((Q_BLK, 128)).astype(np.float32))
+    d = jnp.asarray(rng.standard_normal((D_BLK * 4, 128)).astype(np.float32))
+    tau = jnp.asarray(rng.standard_normal(Q_BLK).astype(np.float32))
+    us = _time(lambda: membership_bitmask(q, d, tau, jnp.float32(0.0)))
+    flops = 2 * Q_BLK * D_BLK * 4 * 128
+    rows.append(("kernel/membership_128x2048", us, f"interpret-mode; {flops/1e6:.1f} MFLOP/call"))
+
+    maps = jnp.asarray(rng.integers(0, 2**32, size=(8, 4, W_BLK), dtype=np.uint32))
+    valid = jnp.ones((8, 4), jnp.int32)
+    us = _time(lambda: bitset_and_popcount(maps, valid))
+    rows.append(("kernel/bitset_8x4x1024", us, f"{8*4*W_BLK*4/1024:.0f} KiB ANDed/call"))
+
+    width = 13
+    words = jnp.asarray(rng.integers(0, 2**32, size=(64, words_per_block(width)), dtype=np.uint32))
+    us = _time(lambda: unpack_blocks(words, width=width))
+    rows.append((f"kernel/pfor_unpack_w{width}", us, f"{64*128} ints/call"))
+    return rows

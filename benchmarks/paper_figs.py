@@ -1,0 +1,88 @@
+"""Paper-figure benchmarks: Fig 1 (df distribution + storage fraction),
+Fig 2 (Eq.2 gain bounds vs truncation k), Fig 3 (% guaranteed-correct).
+
+Each returns rows of (name, value, derived-notes); run.py prints CSV.
+Collections are the calibrated synthetic stand-ins (DESIGN.md §5) at
+CI scale (--scale to grow them)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.common.config import PAPER_COLLECTIONS, scaled_collection
+from repro.core.gain import gain_curve, storage_fraction_curve
+from repro.core.algorithms import two_tier_guaranteed
+from repro.data.corpus import document_frequencies, synthesize_corpus
+from repro.data.queries import sample_queries
+from repro.index.build import build_inverted_index
+
+import jax.numpy as jnp
+
+SCALE = 0.02  # 1/50 of the 1/100-scaled targets by default (CI-fast)
+KS = (125, 250, 500, 1000, 2000, 4000)
+
+
+def _collections(scale=SCALE):
+    out = {}
+    for name, base in PAPER_COLLECTIONS.items():
+        # floor each collection at 2.5k docs so every truncation size in KS
+        # is meaningful (Robust is 100x smaller than ClueWeb to begin with)
+        eff = max(scale, 2500 / base.n_docs)
+        cfg = scaled_collection(base, eff)
+        corpus = synthesize_corpus(cfg)
+        out[name] = (corpus, build_inverted_index(corpus))
+    return out
+
+
+def fig1_rows(colls=None):
+    """df skew + min #terms at 40% of compressed storage (paper: <1%)."""
+    rows = []
+    colls = colls or _collections()
+    for name, (corpus, inv) in colls.items():
+        df = document_frequencies(corpus)
+        t0 = time.time()
+        cum, counts = storage_fraction_curve(inv)
+        dt = (time.time() - t0) * 1e6
+        n40 = int(counts[np.searchsorted(cum, 0.4)])
+        frac = n40 / max(1, int((inv.dfs > 0).sum()))
+        rows.append((f"fig1/{name}/terms_at_40pct_storage", dt,
+                     f"n={n40} frac={frac:.4f} max_df={int(df.max())}"))
+    return rows
+
+
+def fig2_rows(colls=None):
+    """Eq.(2) storage-gain bounds (s=0 upper, s=512 lower) vs k."""
+    rows = []
+    colls = colls or _collections()
+    for name, (corpus, inv) in colls.items():
+        ks = [k for k in KS if k < corpus.n_docs]
+        t0 = time.time()
+        curve = gain_curve(inv, ks)
+        dt = (time.time() - t0) * 1e6 / max(1, len(ks))
+        for g in curve:
+            rows.append((
+                f"fig2/{name}/k={g.k}", dt,
+                f"gain_upper={g.gain_upper_frac:.3f} gain_lower={g.gain_lower_frac:.3f} "
+                f"replaced={g.n_replaced}",
+            ))
+    return rows
+
+
+def fig3_rows(colls=None, n_queries=2000):
+    """% queries guaranteed-correct in tier-1, with vs without the model."""
+    rows = []
+    colls = colls or _collections()
+    for name, (corpus, inv) in colls.items():
+        q = sample_queries(corpus, n_queries, seed=17)
+        dfs = jnp.asarray(inv.dfs.astype(np.int32))
+        qj = jnp.asarray(q)
+        ks = [k for k in KS if k < corpus.n_docs]
+        for k in ks:
+            t0 = time.time()
+            w = float(np.asarray(two_tier_guaranteed(dfs, qj, k, with_model=True)).mean())
+            wo = float(np.asarray(two_tier_guaranteed(dfs, qj, k, with_model=False)).mean())
+            dt = (time.time() - t0) * 1e6
+            rows.append((f"fig3/{name}/k={k}", dt,
+                         f"guaranteed_with={w:.3f} without={wo:.3f} uplift={w-wo:.3f}"))
+    return rows

@@ -1,0 +1,106 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Terms (per device, per step):
+  compute_s    = HLO_flops / PEAK_FLOPS
+  memory_s     = HLO_bytes / HBM_BW
+  collective_s = Σ collective bytes / ICI_BW
+The dominant term is the bottleneck; MODEL_FLOPS/HLO_FLOPS measures how much
+compiled compute is "useful" (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# 6·N·D with N = (active) params, D = tokens per step — per arch × shape
+ARCH_PARAMS = {  # total / active parameter counts
+    "phi4-mini-3.8b": (3.8e9, 3.8e9),
+    "gemma2-2b": (2.6e9, 2.6e9),
+    "gemma-2b": (2.5e9, 2.5e9),
+    "deepseek-v2-lite-16b": (15.7e9, 2.4e9),
+    "deepseek-v3-671b": (671e9, 37e9),
+}
+
+
+def model_flops(arch: str, shape: str, kind: str, batch: int, seq: int, n_dev: int) -> float | None:
+    if arch not in ARCH_PARAMS:
+        return None
+    total, active = ARCH_PARAMS[arch]
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * active * tokens / n_dev
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * active * tokens / n_dev
+    if kind == "decode":
+        tokens = batch  # one new token per sequence
+        return 2.0 * active * tokens / n_dev
+    return None
+
+
+SHAPE_DIMS = {
+    "train_4k": (256, 4096, "train"),
+    "prefill_32k": (32, 32768, "prefill"),
+    "decode_32k": (128, 32768, "decode"),
+    "long_500k": (1, 524288, "decode"),
+}
+
+
+def analyze(record: dict[str, Any]) -> dict[str, Any] | None:
+    if record.get("status") != "ok":
+        return None
+    flops = record["flops_per_device"]
+    mem_bytes = record["bytes_per_device"]
+    coll = sum(record["collective_bytes_per_device"].values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    out = dict(record)
+    out.update(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        # fraction of the roofline-limited time spent in the dominant term —
+        # perfect overlap would run at max(terms); serial would be sum(terms)
+        roofline_s=max(terms.values()),
+        balance=max(terms.values()) / max(1e-12, sum(terms.values())),
+    )
+    dims = SHAPE_DIMS.get(record["shape"])
+    if dims and record["arch"] in ARCH_PARAMS:
+        b, s, kind = dims
+        mf = model_flops(record["arch"], record["shape"], kind, b, s, record["n_devices"])
+        if mf:
+            out["model_flops_per_device"] = mf
+            out["useful_flop_frac"] = mf / max(flops, 1.0)
+            out["mfu_upper_bound"] = mf / PEAK_FLOPS / max(terms.values())
+    return out
+
+
+def rows_from_file(path: str):
+    with open(path) as f:
+        records = json.load(f)
+    rows = []
+    for r in records:
+        a = analyze(r)
+        if a is None:
+            rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                         f"status={r['status']}"))
+            continue
+        extra = ""
+        if "useful_flop_frac" in a:
+            extra = f" useful_flops={a['useful_flop_frac']:.2f} mfu_bound={a['mfu_upper_bound']:.2f}"
+        rows.append((
+            f"roofline/{a['arch']}/{a['shape']}",
+            a["roofline_s"] * 1e6,
+            f"dominant={a['dominant']} compute_s={a['compute_s']:.4f} "
+            f"memory_s={a['memory_s']:.4f} collective_s={a['collective_s']:.4f}{extra}",
+        ))
+    return rows

@@ -1,0 +1,37 @@
+"""Benchmark harness: one section per paper artifact + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.
+  fig1/..   df skew + storage fraction            (paper Fig 1)
+  fig2/..   Eq.(2) gain bounds vs truncation k    (paper Fig 2 + Eq. 2)
+  fig3/..   % guaranteed-correct queries          (paper Fig 3)
+  codec/..  compression ratios (OptPFD vs others) (paper §4 setup)
+  kernel/.. Pallas kernels, interpret-mode        (plumbing check)
+  roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
+"""
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_figs import _collections, fig1_rows, fig2_rows, fig3_rows
+    from benchmarks.codec_kernels import codec_rows, kernel_rows
+    from benchmarks.roofline import rows_from_file
+
+    print("name,us_per_call,derived")
+    colls = _collections()
+    rows = []
+    rows += fig1_rows(colls)
+    rows += fig2_rows(colls)
+    rows += fig3_rows(colls)
+    rows += codec_rows()
+    rows += kernel_rows()
+    for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
+        if os.path.exists(path):
+            rows += rows_from_file(path)
+            break
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Vertical product search (the paper's §1 motivation): Boolean attribute
+pre-filtering with the learned index, fused with dense retrieval scoring —
+the recsys `retrieval_cand` path with the paper's technique in front.
+
+Catalogue items have attribute sets (category, brand, tags...). A query is
+a conjunctive attribute filter + a user interest vector. Pipeline:
+  1. learned index (Algorithm 3) filters the catalogue to candidates;
+  2. MIND-style dot scoring ranks the survivors;
+  3. results provably contain every matching item (zero-FN guarantee).
+
+  PYTHONPATH=src python examples/boolean_product_search.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import CorpusConfig, LearnedIndexConfig
+from repro.core import fit_thresholds, init_membership
+from repro.data.corpus import synthesize_corpus
+from repro.index.build import build_inverted_index
+from repro.serve import BooleanEngine, ServeConfig
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # catalogue: 3000 items ("docs"), 500 attributes ("terms")
+    corpus = synthesize_corpus(
+        CorpusConfig(name="catalogue", n_docs=3000, n_terms=500, avg_doc_len=12)
+    )
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(embed_dim=32, truncation_k=32, block_size=64)
+    params, _ = init_membership(jax.random.key(0), li_cfg, corpus.n_terms, corpus.n_docs)
+    lb = fit_thresholds(params, inv)
+    eng = BooleanEngine(lb, inv, li_cfg, ServeConfig(algorithm="block", verified=True))
+
+    # dense side: item embeddings + a user interest vector
+    item_emb = rng.standard_normal((corpus.n_docs, 32)).astype(np.float32)
+    user = rng.standard_normal(32).astype(np.float32)
+
+    # query: items that carry ALL of these attributes
+    filt = np.array([[2, 17, 33, -1]], dtype=np.int32)
+    candidates = eng.query_batch(filt)[0]
+    print(f"Boolean filter -> {len(candidates)} candidate items")
+
+    scores = item_emb[candidates] @ user
+    top = candidates[np.argsort(scores)[::-1][:10]]
+    print("top-10 after dense scoring:", top.tolist())
+
+    # exactness: no matching item was lost by the learned filter
+    truth = [d for d in range(corpus.n_docs)
+             if all(corpus.contains(int(t), d) for t in filt[0] if t >= 0)]
+    assert set(truth) == set(candidates.tolist())
+    print(f"guarantee holds: all {len(truth)} matching items present")
+
+
+if __name__ == "__main__":
+    main()

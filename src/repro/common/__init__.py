@@ -1,0 +1,23 @@
+from repro.common.config import (
+    ArchConfig,
+    LearnedIndexConfig,
+    MeshConfig,
+    OptimizerConfig,
+    TrainConfig,
+)
+from repro.common.sharding import (
+    logical_to_sharding,
+    shard_params,
+    with_sharding,
+)
+
+__all__ = [
+    "ArchConfig",
+    "LearnedIndexConfig",
+    "MeshConfig",
+    "OptimizerConfig",
+    "TrainConfig",
+    "logical_to_sharding",
+    "shard_params",
+    "with_sharding",
+]

@@ -1,0 +1,104 @@
+"""Tiny functional NN layer helpers shared across model families.
+
+We deliberately avoid flax/haiku (not installed): params are plain pytrees of
+jnp arrays, layers are pure functions. Each init returns (params, logical_axes)
+twin pytrees so sharding rules can be applied mechanically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, axes=(None, "model"), dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(scale, dtype)
+    return {"w": w}, {"w": tuple(axes)}
+
+
+def dense(params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def bias_dense_init(key, d_in, d_out, *, axes=(None, "model"), dtype=jnp.float32, scale=None):
+    p, a = dense_init(key, d_in, d_out, axes=axes, dtype=dtype, scale=scale)
+    p["b"] = jnp.zeros((d_out,), dtype)
+    a["b"] = (axes[1],)
+    return p, a
+
+
+def bias_dense(params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype) + params["b"].astype(x.dtype)
+
+
+def mlp_init(key, dims: Sequence[int], *, dtype=jnp.float32, hidden_axis="model"):
+    """dims = [in, h1, ..., out]. Alternates sharded/replicated hidden axes."""
+    params, axes = [], []
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        ax_in = hidden_axis if i % 2 == 1 else None
+        ax_out = hidden_axis if i % 2 == 0 else None
+        p, ax = bias_dense_init(keys[i], a, b, axes=(ax_in, ax_out), dtype=dtype)
+        params.append(p)
+        axes.append(ax)
+    return params, axes
+
+
+def mlp(params, x: jax.Array, *, act=jax.nn.relu, final_act=None) -> jax.Array:
+    for i, p in enumerate(params):
+        x = bias_dense(p, x)
+        if i < len(params) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) so zero-init is identity
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return (
+        {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+        {"scale": (None,), "bias": (None,)},
+    )
+
+
+def layernorm(params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def embedding_init(key, vocab: int, dim: int, *, axes=("vocab", None), dtype=jnp.float32, scale=0.02):
+    e = jax.random.normal(key, (vocab, dim), dtype) * scale
+    return {"table": e}, {"table": tuple(axes)}
+
+
+def embed(params, ids: jax.Array, compute_dtype=None) -> jax.Array:
+    t = params["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,56 @@
+"""The paper's contribution: learned index structures for inverted-index
+compression, as a composable JAX module.
+
+  membership     — the learned f(t, d) (embedding-dot / MLP family)
+  learned_bloom  — zero-false-negative thresholds + exact backup (guarantees)
+  algorithms     — Algorithms 1 (exhaustive), 2 (two-tier), 3 (block-based)
+  gain           — Eq. (2) storage-gain bounds and Fig-1/2/3 analyses
+"""
+from repro.core.membership import (
+    init_membership,
+    membership_loss,
+    pair_logits,
+    predict,
+    term_doc_logits,
+)
+from repro.core.learned_bloom import (
+    LearnedBloom,
+    bloom_predict,
+    false_negative_rate,
+    false_positive_rate,
+    fit_thresholds,
+)
+from repro.core.algorithms import (
+    EngineState,
+    block_query,
+    build_engine,
+    exhaustive_query,
+    run_queries,
+    two_tier_guaranteed,
+    two_tier_query,
+)
+from repro.core.gain import GainReport, estimate_gain, gain_curve, storage_fraction_curve
+
+__all__ = [
+    "init_membership",
+    "membership_loss",
+    "pair_logits",
+    "predict",
+    "term_doc_logits",
+    "LearnedBloom",
+    "bloom_predict",
+    "false_negative_rate",
+    "false_positive_rate",
+    "fit_thresholds",
+    "EngineState",
+    "block_query",
+    "build_engine",
+    "exhaustive_query",
+    "run_queries",
+    "two_tier_guaranteed",
+    "two_tier_query",
+    "GainReport",
+    "estimate_gain",
+    "gain_curve",
+    "storage_fraction_curve",
+]

@@ -1,0 +1,187 @@
+"""Algorithms 1–3 from the paper, as batched jit-able query evaluators.
+
+All three take a padded query batch (Q, T) of term ids (-1 = pad) and return
+a boolean result mask over documents. They differ exactly as the paper's
+complexity analysis says:
+
+  * exhaustive  — O(|D|·|q|) model evals, zero postings storage (Alg. 1)
+  * two_tier    — evals only on the union of tier-1 truncated lists (Alg. 2)
+  * block       — evals only inside blocks surviving bitmap AND (Alg. 3)
+
+Document scoring uses the learned-Bloom thresholds (no false negatives), so
+results are supersets of the exact answer; `verified=True` in serve/boolean.py
+re-checks survivors against the exact tier-2 index.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import membership
+from repro.index.build import InvertedIndex, block_lists, truncate_index
+from repro.index.intersect import padded_union
+
+
+@dataclass
+class EngineState:
+    """Dense, device-resident state for the three algorithms."""
+
+    params: Any  # membership model
+    tau: jax.Array  # (n_terms,) per-term zero-FN thresholds
+    n_docs: int
+    block_size: int
+    truncation_k: int
+    tier1: jax.Array  # (n_terms, k) int32 doc ids, padded with n_docs
+    tier1_len: jax.Array  # (n_terms,) int32
+    dfs: jax.Array  # (n_terms,) int32 full document frequencies
+    block_bitmaps: jax.Array  # (n_terms, words) uint32
+    n_blocks: int
+
+
+def build_engine(
+    params: Any, tau: np.ndarray, inv: InvertedIndex, *, truncation_k: int, block_size: int
+) -> EngineState:
+    tr = truncate_index(inv, truncation_k)
+    k = truncation_k
+    t1 = np.full((inv.n_terms, k), inv.n_docs, dtype=np.int32)
+    lens = np.diff(tr.term_offsets).astype(np.int32)
+    for t in np.nonzero(lens)[0]:
+        t1[t, : lens[t]] = tr.postings(int(t))
+    bitmaps, n_blocks = block_lists(inv, block_size)
+    return EngineState(
+        params=params,
+        tau=jnp.asarray(tau),
+        n_docs=inv.n_docs,
+        block_size=block_size,
+        truncation_k=k,
+        tier1=jnp.asarray(t1),
+        tier1_len=jnp.asarray(lens),
+        dfs=jnp.asarray(inv.dfs.astype(np.int32)),
+        block_bitmaps=jnp.asarray(bitmaps),
+        n_blocks=n_blocks,
+    )
+
+
+def _f_hat_docs(params, tau, terms: jax.Array, doc_ids: jax.Array) -> jax.Array:
+    """(T,) terms × (D',) docs -> (T, D') thresholded membership."""
+    logits = membership.term_doc_logits(params, terms, doc_ids)
+    return logits >= tau[terms][:, None]
+
+
+# ---------------------------------------------------------------- Algorithm 1
+@partial(jax.jit, static_argnames=("n_docs",))
+def exhaustive_query(params, tau, queries: jax.Array, *, n_docs: int) -> jax.Array:
+    """(Q, T) padded queries -> (Q, n_docs) bool result mask."""
+    valid = queries >= 0
+    q_safe = jnp.maximum(queries, 0)
+
+    def per_term(carry, xs):
+        terms, ok = xs  # (Q,), (Q,)
+        logits = membership.term_doc_logits(params, terms)  # (Q, D)
+        hit = logits >= tau[terms][:, None]
+        return carry & (hit | ~ok[:, None]), None
+
+    init = jnp.ones((queries.shape[0], n_docs), dtype=bool)
+    mask, _ = jax.lax.scan(per_term, init, (q_safe.T, valid.T))
+    # all-pad queries match nothing
+    return mask & valid.any(axis=1)[:, None]
+
+
+# ---------------------------------------------------------------- Algorithm 2
+@partial(jax.jit, static_argnames=("n_docs",))
+def two_tier_query(state_tier1, state_len, params, tau, queries: jax.Array, *, n_docs: int):
+    """Returns (candidates (Q, T*k), result_mask (Q, T*k)).
+
+    candidates are the union of tier-1 truncated lists (padded with INT32_MAX);
+    result_mask[i,j] = candidate j of query i passes ∀t f_hat(t, d).
+    """
+    valid = queries >= 0
+    q_safe = jnp.maximum(queries, 0)
+
+    def per_query(terms, ok):
+        lists = jnp.where(ok[:, None], state_tier1[terms], n_docs)  # (T, k)
+        lens = jnp.where(ok, state_len[terms], 0)
+        cand, count = padded_union(lists, lens)  # (T*k,)
+        in_range = jnp.arange(cand.shape[0]) < count
+        d_safe = jnp.where(in_range, cand, 0)
+        hits = _f_hat_docs(params, tau, terms, d_safe)  # (T, T*k)
+        hits = hits | ~ok[:, None]
+        passed = hits.all(axis=0) & in_range & ok.any()
+        return cand, passed
+
+    return jax.vmap(per_query)(q_safe, valid)
+
+
+def two_tier_guaranteed(dfs: jax.Array, queries: jax.Array, k: int, *, with_model: bool) -> jax.Array:
+    """Fig-3 correctness guarantee per query.
+
+    with model:   ≥1 term has a complete tier-1 list (df ≤ k)     (paper §3.2)
+    without:      ALL terms must have complete lists.
+    """
+    valid = queries >= 0
+    complete = dfs[jnp.maximum(queries, 0)] <= k
+    if with_model:
+        return (complete & valid).any(axis=1)
+    return (complete | ~valid).all(axis=1) & valid.any(axis=1)
+
+
+# ---------------------------------------------------------------- Algorithm 3
+@partial(jax.jit, static_argnames=("n_docs", "block_size"))
+def block_query(bitmaps, params, tau, queries: jax.Array, *, n_docs: int, block_size: int):
+    """(Q, T) -> (Q, n_docs) bool; model evaluated only in surviving blocks."""
+    valid = queries >= 0
+    q_safe = jnp.maximum(queries, 0)
+    qmaps = bitmaps[q_safe]  # (Q, T, W)
+    full = jnp.full((), 0xFFFFFFFF, dtype=jnp.uint32)
+    qmaps = jnp.where(valid[:, :, None], qmaps, full)
+    inter = jax.lax.reduce(
+        qmaps, full, jnp.bitwise_and, dimensions=(1,)
+    )  # (Q, W)
+
+    # expand block bitmap -> per-doc candidacy
+    doc_ids = jnp.arange(n_docs)
+    blk = doc_ids // block_size
+    word, bit = blk // 32, (blk % 32).astype(jnp.uint32)
+    cand = (inter[:, word] >> bit) & jnp.uint32(1)  # (Q, D)
+    cand = cand.astype(bool) & valid.any(axis=1)[:, None]
+
+    def per_term(carry, xs):
+        terms, ok = xs
+        logits = membership.term_doc_logits(params, terms)
+        hit = logits >= tau[terms][:, None]
+        return carry & (hit | ~ok[:, None]), None
+
+    mask, _ = jax.lax.scan(per_term, cand, (q_safe.T, valid.T))
+    return mask
+
+
+# ---------------------------------------------------------------- dispatch
+def run_queries(state: EngineState, queries: np.ndarray, algorithm: str) -> np.ndarray:
+    """Convenience host API -> dense (Q, n_docs) bool numpy mask."""
+    q = jnp.asarray(queries)
+    if algorithm == "exhaustive":
+        out = exhaustive_query(state.params, state.tau, q, n_docs=state.n_docs)
+    elif algorithm == "block":
+        out = block_query(
+            state.block_bitmaps, state.params, state.tau, q,
+            n_docs=state.n_docs, block_size=state.block_size,
+        )
+    elif algorithm == "two_tier":
+        cand, passed = two_tier_query(
+            state.tier1, state.tier1_len, state.params, state.tau, q, n_docs=state.n_docs
+        )
+        out = np.zeros((queries.shape[0], state.n_docs), dtype=bool)
+        cand, passed = np.asarray(cand), np.asarray(passed)
+        for i in range(queries.shape[0]):
+            ids = cand[i][passed[i]]
+            ids = ids[ids < state.n_docs]
+            out[i, ids] = True
+        return out
+    else:
+        raise ValueError(f"unknown algorithm {algorithm}")
+    return np.asarray(out)

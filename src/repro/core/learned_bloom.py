@@ -1,0 +1,134 @@
+"""Learned Bloom filter construction (Kraska et al. §5) over (term, doc) pairs.
+
+The paper leans on Kraska's observation that a learned structure can "fallback
+on traditional structures for sub-cases where a learned model performs poorly",
+restoring exact guarantees. We implement that construction:
+
+  1. fit a per-term threshold τ_t = min logit over indexed positives of t
+     (so the model alone has ZERO false negatives on the collection);
+  2. positives whose margin is degenerate (τ_t would admit too many false
+     positives) spill into an exact backup set (sorted (t,d) key array —
+     the traditional structure);
+  3. query: f_hat(t,d) = logit(t,d) ≥ τ_t  OR  (t,d) ∈ backup.
+
+τ carries a small numerical margin (NUMERIC_MARGIN): XLA fusion reorders
+float reductions, so the same logit can differ by a few ulp between the
+fitting pass and a later jitted query program. The margin makes the zero-FN
+guarantee robust to that drift at negligible false-positive cost.
+
+No false negatives ⇒ Boolean results are supersets; `verified` mode
+re-checks survivors against tier-2 for exactness (see algorithms.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import membership
+from repro.index.build import InvertedIndex
+
+# absolute + relative slack applied below the fitted min-positive logit
+NUMERIC_MARGIN = 1e-5
+
+
+@dataclass
+class LearnedBloom:
+    params: Any
+    tau: np.ndarray  # (n_terms,) float32 per-term zero-FN threshold
+    backup_keys: np.ndarray  # sorted int64 keys t*n_docs+d spilled to exact storage
+    n_docs: int
+
+    def size_bits(self, embed_bits: int = 32) -> int:
+        te = self.params["term_embed"]["table"]
+        de = self.params["doc_embed"]["table"]
+        return int(
+            (te.size + de.size) * embed_bits
+            + self.tau.size * 32
+            + self.backup_keys.size * 64
+        )
+
+
+def fit_thresholds(
+    params: Any,
+    inv: InvertedIndex,
+    *,
+    terms: np.ndarray | None = None,
+    backup_quantile: float = 0.0,
+    batch_docs: int = 8192,
+) -> LearnedBloom:
+    """Scan indexed positives per term; τ_t = quantile of positive logits.
+
+    backup_quantile=0 → τ is the exact min (no backup needed). Larger values
+    trade backup storage for higher τ (fewer false positives): positives below
+    τ_t spill to the exact backup set.
+    """
+    n_terms, n_docs = inv.n_terms, inv.n_docs
+    all_terms = np.arange(n_terms) if terms is None else np.asarray(terms)
+    tau = np.full(n_terms, np.inf, dtype=np.float32)
+    backup: list[np.ndarray] = []
+
+    logit_fn = jax.jit(membership.pair_logits)
+    for t in all_terms:
+        docs = inv.postings(int(t))
+        if len(docs) == 0:
+            tau[t] = np.inf  # never fires; exhaustive scans treat as no match
+            continue
+        logits = np.asarray(
+            logit_fn(params, jnp.full(len(docs), t, jnp.int32), jnp.asarray(docs))
+        )
+        if backup_quantile > 0.0 and len(docs) > 8:
+            q = float(np.quantile(logits, backup_quantile))
+            spill = docs[logits < q]
+            if len(spill):
+                backup.append(t * np.int64(n_docs) + spill.astype(np.int64))
+            tau[t] = q
+        else:
+            tau[t] = float(logits.min())
+    finite = np.isfinite(tau)
+    tau[finite] -= NUMERIC_MARGIN * (1.0 + np.abs(tau[finite]))
+    keys = np.sort(np.concatenate(backup)) if backup else np.zeros(0, np.int64)
+    return LearnedBloom(params=params, tau=tau, backup_keys=keys, n_docs=n_docs)
+
+
+def bloom_predict(
+    lb: LearnedBloom, terms: jax.Array, docs: jax.Array
+) -> jax.Array:
+    """Vectorized f_hat with guarantee: logit ≥ τ_t OR exact-backup hit."""
+    logits = membership.pair_logits(lb.params, terms, docs)
+    tau = jnp.take(jnp.asarray(lb.tau), terms)
+    hit = logits >= tau
+    if len(lb.backup_keys):
+        keys = terms.astype(jnp.int64) * lb.n_docs + docs.astype(jnp.int64)
+        bk = jnp.asarray(lb.backup_keys)
+        idx = jnp.clip(jnp.searchsorted(bk, keys), 0, len(lb.backup_keys) - 1)
+        hit = hit | (jnp.take(bk, idx) == keys)
+    return hit
+
+
+def false_negative_rate(lb: LearnedBloom, inv: InvertedIndex, sample: int = 20000, seed: int = 0) -> float:
+    """Must be exactly 0.0 on indexed pairs — property-tested."""
+    rng = np.random.default_rng(seed)
+    term_of = np.repeat(np.arange(inv.n_terms, dtype=np.int64), inv.dfs)
+    idx = rng.integers(0, inv.n_postings, size=min(sample, inv.n_postings))
+    t, d = term_of[idx].astype(np.int32), inv.doc_ids[idx]
+    pred = np.asarray(bloom_predict(lb, jnp.asarray(t), jnp.asarray(d)))
+    return float(1.0 - pred.mean())
+
+
+def false_positive_rate(lb: LearnedBloom, inv: InvertedIndex, sample: int = 20000, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, inv.n_terms, size=sample).astype(np.int32)
+    d = rng.integers(0, inv.n_docs, size=sample).astype(np.int32)
+    pred = np.asarray(bloom_predict(lb, jnp.asarray(t), jnp.asarray(d)))
+    # remove true positives from the sample
+    truth = np.zeros(sample, dtype=bool)
+    for i in range(sample):
+        p = inv.postings(int(t[i]))
+        j = np.searchsorted(p, d[i])
+        truth[i] = j < len(p) and p[j] == d[i]
+    neg = ~truth
+    return float(pred[neg].mean()) if neg.any() else 0.0

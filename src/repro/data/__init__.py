@@ -1,0 +1,12 @@
+from repro.data.corpus import Corpus, synthesize_corpus
+from repro.data.queries import sample_queries
+from repro.data.loader import PrefetchLoader, membership_batches, lm_token_batches
+
+__all__ = [
+    "Corpus",
+    "synthesize_corpus",
+    "sample_queries",
+    "PrefetchLoader",
+    "membership_batches",
+    "lm_token_batches",
+]

@@ -1,0 +1,57 @@
+"""TREC Million-Query-Track-style query sampler.
+
+MQT queries are short (1-5 terms) keyword queries whose terms are biased
+toward *frequent* vocabulary (people search with common words). We sample
+term ids df-biased with a temperature, matching the paper's Fig-3 setup of
+40k queries evaluated for tier-1 correctness guarantees.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.corpus import Corpus, document_frequencies
+
+
+def sample_queries(
+    corpus: Corpus,
+    n_queries: int,
+    *,
+    max_terms: int = 5,
+    df_temperature: float = 0.55,
+    seed: int = 13,
+) -> np.ndarray:
+    """Returns (n_queries, max_terms) int32; -1 pads short queries."""
+    rng = np.random.default_rng(seed)
+    df = document_frequencies(corpus).astype(np.float64)
+    w = np.power(np.maximum(df, 1.0), df_temperature)
+    w[df == 0] = 0.0
+    p = w / w.sum()
+
+    lengths = rng.integers(1, max_terms + 1, size=n_queries)
+    out = np.full((n_queries, max_terms), -1, dtype=np.int32)
+    flat = rng.choice(corpus.n_terms, size=int(lengths.sum()), p=p).astype(np.int32)
+    pos = 0
+    for i, L in enumerate(lengths):
+        out[i, :L] = flat[pos : pos + L]
+        pos += L
+    return out
+
+
+def brute_force_answers(corpus: Corpus, queries: np.ndarray) -> list[np.ndarray]:
+    """Exact conjunctive Boolean answers (oracle for tests/benchmarks)."""
+    from repro.index.build import build_inverted_index
+
+    inv = build_inverted_index(corpus)
+    answers = []
+    for q in queries:
+        terms = [int(t) for t in q if t >= 0]
+        if not terms:
+            answers.append(np.empty(0, dtype=np.int32))
+            continue
+        cur = inv.postings(terms[0])
+        for t in terms[1:]:
+            cur = np.intersect1d(cur, inv.postings(t), assume_unique=True)
+            if cur.size == 0:
+                break
+        answers.append(cur.astype(np.int32))
+    return answers

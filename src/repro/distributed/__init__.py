@@ -1,0 +1,22 @@
+from repro.distributed.compression import (
+    ErrorFeedback,
+    compressed_allreduce,
+    dequantize_chunk,
+    quantize_chunk,
+)
+from repro.distributed.collective_matmul import (
+    collective_matmul_ag,
+    matmul_reduce_scatter,
+)
+from repro.distributed.pipeline import gpipe, make_pipeline_fn
+
+__all__ = [
+    "ErrorFeedback",
+    "compressed_allreduce",
+    "quantize_chunk",
+    "dequantize_chunk",
+    "collective_matmul_ag",
+    "matmul_reduce_scatter",
+    "gpipe",
+    "make_pipeline_fn",
+]

@@ -1,0 +1,77 @@
+"""All-gather-overlapped matmul (collective matmul, Wang et al., MaxText).
+
+Setting: y = x_global @ W_local where
+  * x is sharded on the contraction axis k (e.g. the reduce-scattered output
+    of the previous TP layer): each device holds (m, k/N);
+  * W is sharded on the output axis n: each device holds ALL k rows for its
+    n/N columns, (k, n/N).
+
+The naive plan all-gathers x over k, THEN multiplies — ICI and MXU serialize.
+The collective matmul rotates x shards around the ring and accumulates one
+partial product per hop against the matching k-row block of the local W:
+comm of hop i+1 overlaps compute of hop i, hiding (N-1)/N of gather latency.
+
+Runs inside shard_map. The pjit path instead relies on XLA async-collective
+latency hiding; both plans are compared in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def collective_matmul_ag(
+    x_shard: jax.Array,  # (m, k_local) — k-sharded input
+    w_full_k: jax.Array,  # (k_global, n_local) — output-sharded weight
+    axis_name: str,
+) -> jax.Array:
+    """Returns y_local = x_global @ w_full_k, shape (m, n_local)."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    k_local = x_shard.shape[1]
+    assert w_full_k.shape[0] == k_local * n, (w_full_k.shape, k_local, n)
+    # send "backwards" so after i hops we hold the shard of device idx+i
+    perm = [(i, (i - 1) % n) for i in range(n)]
+
+    def body(i, carry):
+        acc, shard = carry
+        origin = (idx + i) % n
+        w_block = jax.lax.dynamic_slice_in_dim(w_full_k, origin * k_local, k_local, axis=0)
+        acc = acc + shard.astype(jnp.float32) @ w_block.astype(jnp.float32)
+        shard = jax.lax.ppermute(shard, axis_name, perm)
+        return acc, shard
+
+    acc0 = jax.lax.pvary(
+        jnp.zeros((x_shard.shape[0], w_full_k.shape[1]), jnp.float32), (axis_name,)
+    )
+    acc, _ = jax.lax.fori_loop(0, n, body, (acc0, x_shard), unroll=True)
+    return acc.astype(x_shard.dtype)
+
+
+def matmul_reduce_scatter(
+    x_shard: jax.Array,  # (m, k_local) — k-sharded input
+    w_k_sharded: jax.Array,  # (k_local, n) — k-sharded weight
+    axis_name: str,
+) -> jax.Array:
+    """y_local = reduce_scatter(x @ w) over n: the dual TP pattern.
+
+    Ring: accumulate partial products while rotating partial sums so each
+    device ends holding only its n/N output columns (wire = fp32 partials).
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    full = x_shard.astype(jnp.float32) @ w_k_sharded.astype(jnp.float32)  # (m, n)
+    n_local = full.shape[1] // n
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(i, acc):
+        # after hop i, acc holds the partial sum destined for device idx+i+1
+        src = (idx + n - 1 - i) % n
+        block = jax.lax.dynamic_slice_in_dim(full, src * n_local, n_local, axis=1)
+        acc = jax.lax.ppermute(acc + block, axis_name, perm)
+        return acc
+
+    acc0 = jax.lax.pvary(jnp.zeros((full.shape[0], n_local), jnp.float32), (axis_name,))
+    acc = jax.lax.fori_loop(0, n - 1, body, acc0, unroll=True)
+    own = jax.lax.dynamic_slice_in_dim(full, idx * n_local, n_local, axis=1)
+    return (acc + own).astype(x_shard.dtype)

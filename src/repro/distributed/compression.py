@@ -1,0 +1,113 @@
+"""int8-compressed ring all-reduce with error feedback (gradient compression).
+
+Why: at (2,16,16) scale the DP gradient all-reduce for a 3.8B dense model
+moves ~7.6 GB/step/chip in bf16; int8 + per-chunk scales cuts wire bytes 2x
+(4x vs fp32) at <1e-2 relative error, and error feedback makes the *training
+trajectory* bias-free (residuals re-injected next step — Karimireddy et al.).
+
+Implemented as a shard_map ring over the `data` axis with ppermute steps:
+  reduce-scatter phase (N-1 quantized hops) then all-gather phase (N-1 hops).
+This is the explicit-collective path; the default pjit path lets XLA emit its
+own all-reduce. Both are selectable per-run (OptimizerConfig.compress_grads).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_chunk(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    q = jnp.round(x / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_chunk(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _ring_allreduce_1d(x: jax.Array, axis_name: str, n: int) -> jax.Array:
+    """Quantized ring all-reduce of a 1-D fp32 vector, length % n == 0."""
+    chunks = x.reshape(n, -1)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: after N-1 hops, chunk (idx+1) holds the full sum
+    def rs_step(i, chunks):
+        send_ix = (idx - i) % n
+        q, s = quantize_chunk(chunks[send_ix])
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        recv_ix = (idx - i - 1) % n
+        return chunks.at[recv_ix].add(dequantize_chunk(q, s))
+
+    chunks = jax.lax.fori_loop(0, n - 1, rs_step, chunks)
+
+    # all-gather: each completed chunk is quantized ONCE at its owner and the
+    # (q, scale) pair circulates verbatim -> every device decodes identical
+    # bytes (bitwise-consistent result, required for SPMD determinism).
+    own_ix = (idx + 1) % n
+    q, s = quantize_chunk(chunks[own_ix])
+    chunks = chunks.at[own_ix].set(dequantize_chunk(q, s))
+
+    def ag_step(i, carry):
+        q, s, chunks = carry
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        recv_ix = (idx - i) % n
+        chunks = chunks.at[recv_ix].set(dequantize_chunk(q, s))
+        return q, s, chunks
+
+    _, _, chunks = jax.lax.fori_loop(0, n - 1, ag_step, (q, s, chunks))
+    return chunks.reshape(-1)
+
+
+def compressed_allreduce(
+    tree: Any, mesh: Mesh, axis_name: str = "data"
+) -> Any:
+    """All-reduce (sum) a gradient pytree over `axis_name` with int8 wire format.
+
+    Call INSIDE shard_map. Leaves are flattened into one fp32 vector so
+    quantization block = ring chunk.
+    """
+    n = mesh.shape[axis_name]
+    if n == 1:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [l.size for l in leaves]
+    shapes = [l.shape for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    out = _ring_allreduce_1d(flat, axis_name, n)
+    out = out[: sum(sizes)]
+    parts = []
+    off = 0
+    for sz, shp, l in zip(sizes, shapes, leaves):
+        parts.append(out[off : off + sz].reshape(shp).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, parts)
+
+
+class ErrorFeedback:
+    """Residual accumulator: g_compressed = C(g + e); e = (g + e) - g_compressed.
+
+    State is a pytree matching grads; apply() returns corrected grads and the
+    new residual. Used by the shard_map DP trainer when compress_grads=True.
+    """
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def pre(grads: Any, residual: Any) -> Any:
+        return jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, residual)
+
+    @staticmethod
+    def post(corrected: Any, compressed: Any) -> Any:
+        return jax.tree.map(lambda c, q: c - q.astype(jnp.float32), corrected, compressed)

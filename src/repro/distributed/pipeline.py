@@ -1,0 +1,94 @@
+"""GPipe-style pipeline parallelism over a `pipe` mesh axis (shard_map).
+
+Each device on the `pipe` axis owns one stage's params (stacked pytree,
+leading axis = stage, sharded over `pipe`). Microbatches stream through the
+ring: at tick t, stage s processes microbatch t-s and forwards activations
+via ppermute. Bubble fraction = (S-1)/(M+S-1), the GPipe schedule.
+
+This is the framework's PP building block; the LM archs default to TP+DP
+(+EP) because at ≤61 layers and 256 chips TP×DP saturates ICI better, but
+the pipeline path is available for cross-pod scaling where DCN bandwidth
+makes TP across pods impractical (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    n_stages: int,
+    axis_name: str = "pipe",
+):
+    """Returns fn(stage_params_local, microbatches) for use INSIDE shard_map.
+
+    stage_params_local: this device's stage params (leading stage axis
+    already stripped by shard_map's sharding).
+    microbatches: (M, mb, ...) — replicated input; stage 0 consumes it.
+    Output: (M, mb, ...) — valid on the LAST stage (others return zeros).
+    """
+
+    def run(stage_params, microbatches):
+        s_idx = jax.lax.axis_index(axis_name)
+        m = microbatches.shape[0]
+        ticks = m + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        mb_shape = microbatches.shape[1:]
+
+        def tick(t, carry):
+            prev_out, outputs = carry
+            # stage 0 reads microbatch t (if in range); others read forwarded acts
+            mb_in = jax.lax.dynamic_index_in_dim(
+                microbatches, jnp.clip(t, 0, m - 1), keepdims=False
+            )
+            x = jnp.where(s_idx == 0, mb_in, prev_out)
+            y = stage_fn(stage_params, x)
+            # forward to next stage
+            fwd = jax.lax.ppermute(y, axis_name, perm)
+            # last stage emits microbatch t-(S-1) at tick t
+            out_ix = t - (n_stages - 1)
+            emit = (s_idx == n_stages - 1) & (out_ix >= 0)
+            outputs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(out_ix, 0), axis=0
+                ),
+                lambda o: o,
+                outputs,
+            )
+            return fwd, outputs
+
+        out0 = jax.lax.pvary(jnp.zeros((m, *mb_shape), microbatches.dtype), (axis_name,))
+        prev0 = jax.lax.pvary(jnp.zeros(mb_shape, microbatches.dtype), (axis_name,))
+        _, outputs = jax.lax.fori_loop(0, ticks, tick, (prev0, out0))
+        # broadcast final outputs from last stage to all (psum over one-hot)
+        mask = jnp.where(s_idx == n_stages - 1, 1.0, 0.0)
+        return jax.lax.psum(outputs * mask, axis_name)
+
+    return run
+
+
+def make_pipeline_fn(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    mesh: Mesh,
+    n_stages: int,
+    axis_name: str = "pipe",
+):
+    """shard_map wrapper: stacked stage params (S, ...) -> pipelined forward."""
+    inner = gpipe(stage_fn, n_stages, axis_name)
+
+    def with_squeeze(stage_params, microbatches):
+        # shard_map leaves a leading stage axis of size 1 on each device
+        local = jax.tree.map(lambda a: a[0], stage_params)
+        return inner(local, microbatches)
+
+    return jax.shard_map(
+        with_squeeze,
+        mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(),
+    )

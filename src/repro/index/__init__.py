@@ -1,0 +1,19 @@
+from repro.index.build import InvertedIndex, build_inverted_index
+from repro.index.compress import (
+    CODECS,
+    compressed_size_bits,
+    decode_postings,
+    encode_postings,
+)
+from repro.index.intersect import intersect_sorted, intersect_many
+
+__all__ = [
+    "InvertedIndex",
+    "build_inverted_index",
+    "CODECS",
+    "compressed_size_bits",
+    "encode_postings",
+    "decode_postings",
+    "intersect_sorted",
+    "intersect_many",
+]

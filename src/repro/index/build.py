@@ -1,0 +1,89 @@
+"""Inverted-index builder: doc->terms incidence transposed to term->docs CSR."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.data.corpus import Corpus
+
+
+@dataclass
+class InvertedIndex:
+    n_docs: int
+    n_terms: int
+    term_offsets: np.ndarray  # (n_terms+1,) int64 into doc_ids
+    doc_ids: np.ndarray  # (total_postings,) int32, sorted per term
+
+    def postings(self, t: int) -> np.ndarray:
+        return self.doc_ids[self.term_offsets[t] : self.term_offsets[t + 1]]
+
+    def df(self, t: int | np.ndarray) -> np.ndarray:
+        return self.term_offsets[np.asarray(t) + 1] - self.term_offsets[np.asarray(t)]
+
+    @property
+    def dfs(self) -> np.ndarray:
+        return np.diff(self.term_offsets)
+
+    @property
+    def n_postings(self) -> int:
+        return int(self.doc_ids.shape[0])
+
+
+def build_inverted_index(corpus: Corpus) -> InvertedIndex:
+    """Counting-sort transpose of the (doc, term) incidence; O(P)."""
+    doc_of = np.repeat(
+        np.arange(corpus.n_docs, dtype=np.int64), np.diff(corpus.doc_offsets)
+    )
+    term = corpus.term_ids.astype(np.int64)
+    # stable sort by term keeps doc_ids ascending within each posting list
+    # (doc_of is already ascending for equal terms because corpus is doc-major)
+    order = np.argsort(term, kind="stable")
+    sorted_docs = doc_of[order].astype(np.int32)
+    counts = np.bincount(term, minlength=corpus.n_terms)
+    offsets = np.zeros(corpus.n_terms + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return InvertedIndex(
+        n_docs=corpus.n_docs,
+        n_terms=corpus.n_terms,
+        term_offsets=offsets,
+        doc_ids=sorted_docs,
+    )
+
+
+def truncate_index(inv: InvertedIndex, k: int) -> InvertedIndex:
+    """Tier-1 index: every posting list truncated to its first k entries.
+
+    The paper makes no assumption about *which* k entries are kept (§3.2);
+    we keep the k lowest doc ids (standard impact-ordering would also work).
+    """
+    dfs = inv.dfs
+    keep = np.minimum(dfs, k)
+    offsets = np.zeros(inv.n_terms + 1, dtype=np.int64)
+    np.cumsum(keep, out=offsets[1:])
+    doc_ids = np.empty(int(offsets[-1]), dtype=np.int32)
+    # vectorized ragged copy
+    src_start = inv.term_offsets[:-1]
+    for t in np.nonzero(keep)[0]:
+        doc_ids[offsets[t] : offsets[t + 1]] = inv.doc_ids[
+            src_start[t] : src_start[t] + keep[t]
+        ]
+    return InvertedIndex(inv.n_docs, inv.n_terms, offsets, doc_ids)
+
+
+def block_lists(inv: InvertedIndex, block_size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-term block bitmaps for Algorithm 3, packed into uint32 words.
+
+    Returns (bitmaps, n_blocks): bitmaps is (n_terms, ceil(n_blocks/32)) u32;
+    bit b of term t set iff some doc in block b contains t.
+    """
+    n_blocks = -(-inv.n_docs // block_size)
+    words = -(-n_blocks // 32)
+    bitmaps = np.zeros((inv.n_terms, words), dtype=np.uint32)
+    term_of = np.repeat(
+        np.arange(inv.n_terms, dtype=np.int64), np.diff(inv.term_offsets)
+    )
+    blk = (inv.doc_ids // block_size).astype(np.int64)
+    word, bit = blk // 32, (blk % 32).astype(np.uint32)
+    np.bitwise_or.at(bitmaps, (term_of, word), np.uint32(1) << bit)
+    return bitmaps, n_blocks

@@ -1,0 +1,237 @@
+"""Postings-list compression codecs.
+
+The paper measures storage under OptPFOR [Lemire & Boytsov '15]; we implement
+OptPFD (per-128-block optimal bit width + exception patching) plus varbyte,
+Elias-Fano and raw bitvectors, so the Fig-1/Fig-2 storage analysis and the
+hybrid representations of §3.3 are all measurable.
+
+All codecs operate on a sorted doc-id list; d-gap transform first. Encoders
+return a uint32 word array; sizes are exact bit counts (compressed_size_bits)
+so Eq. (2) can be evaluated without byte-alignment noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+BLOCK = 128  # PFor block length; matches SIMD-friendly CPU codecs & 128-lane VREG
+
+
+# --------------------------------------------------------------------------- dgap
+def dgaps(doc_ids: np.ndarray) -> np.ndarray:
+    if len(doc_ids) == 0:
+        return doc_ids.astype(np.uint32)
+    out = np.empty_like(doc_ids, dtype=np.uint32)
+    out[0] = doc_ids[0]
+    np.subtract(doc_ids[1:], doc_ids[:-1], out=out[1:], casting="unsafe")
+    return out
+
+
+def undgaps(gaps: np.ndarray) -> np.ndarray:
+    return np.cumsum(gaps.astype(np.int64)).astype(np.int32)
+
+
+# --------------------------------------------------------------------------- varbyte
+def varbyte_size_bits(gaps: np.ndarray) -> int:
+    if len(gaps) == 0:
+        return 0
+    v = np.maximum(gaps.astype(np.int64), 1)
+    nbytes = (np.floor(np.log2(v)).astype(np.int64) // 7) + 1
+    return int(nbytes.sum() * 8)
+
+
+def varbyte_encode(gaps: np.ndarray) -> np.ndarray:
+    out = bytearray()
+    for g in gaps.tolist():
+        g = int(g)
+        while True:
+            b = g & 0x7F
+            g >>= 7
+            if g:
+                out.append(b)
+            else:
+                out.append(b | 0x80)
+                break
+    buf = np.frombuffer(bytes(out), dtype=np.uint8)
+    pad = (-len(buf)) % 4
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, np.uint8)])
+    return buf.view(np.uint32).copy()
+
+
+def varbyte_decode(words: np.ndarray, n: int) -> np.ndarray:
+    buf = words.view(np.uint8)
+    out = np.empty(n, dtype=np.uint32)
+    val, shift, j = 0, 0, 0
+    for b in buf.tolist():
+        val |= (b & 0x7F) << shift
+        if b & 0x80:
+            out[j] = val
+            j += 1
+            if j == n:
+                break
+            val, shift = 0, 0
+        else:
+            shift += 7
+    return out
+
+
+# --------------------------------------------------------------------------- bitpack
+def pack_bits(vals: np.ndarray, width: int) -> np.ndarray:
+    """Pack uint32 vals (each < 2**width) into a dense little-endian bitstream."""
+    n = len(vals)
+    if width == 0 or n == 0:
+        return np.zeros(0, dtype=np.uint32)
+    total_bits = n * width
+    words = np.zeros((total_bits + 31) // 32, dtype=np.uint64)
+    bitpos = np.arange(n, dtype=np.int64) * width
+    word_idx, off = bitpos // 32, (bitpos % 32).astype(np.uint64)
+    v = vals.astype(np.uint64)
+    lo = (v << off) & np.uint64(0xFFFFFFFF)
+    hi = v >> (np.uint64(32) - off).clip(max=np.uint64(63))
+    hi = np.where(off == 0, 0, hi)
+    np.bitwise_or.at(words, word_idx, lo)
+    spill = word_idx + 1 < len(words)
+    np.bitwise_or.at(words, word_idx[spill] + 1, hi[spill])
+    return words.astype(np.uint32)
+
+
+def unpack_bits(words: np.ndarray, width: int, n: int) -> np.ndarray:
+    if width == 0 or n == 0:
+        return np.zeros(n, dtype=np.uint32)
+    w = words.astype(np.uint64)
+    bitpos = np.arange(n, dtype=np.int64) * width
+    word_idx, off = bitpos // 32, (bitpos % 32).astype(np.uint64)
+    lo = w[word_idx] >> off
+    nxt = np.where(word_idx + 1 < len(w), w[np.minimum(word_idx + 1, len(w) - 1)], 0)
+    hi = np.where(off == 0, 0, nxt << (np.uint64(32) - off))
+    mask = (np.uint64(1) << np.uint64(width)) - np.uint64(1)
+    return ((lo | hi) & mask).astype(np.uint32)
+
+
+# --------------------------------------------------------------------------- OptPFD
+def _block_cost_bits(block: np.ndarray, b: int) -> int:
+    """Cost of one block at base width b: header + packed + exceptions.
+
+    Exceptions (vals >= 2**b) store their high bits in a 32-bit overflow slot
+    plus an 8-bit position; header = 8 bits (width) + 16 bits (n_exceptions).
+    """
+    exc = int((block >> np.uint32(b)).astype(bool).sum()) if b < 32 else 0
+    return 24 + len(block) * b + exc * 40
+
+
+def optpfd_size_bits(gaps: np.ndarray) -> int:
+    """Per-block optimal width (the 'Opt' in OptPFD)."""
+    if len(gaps) == 0:
+        return 0
+    total = 0
+    for s in range(0, len(gaps), BLOCK):
+        block = gaps[s : s + BLOCK].astype(np.uint32)
+        maxv = int(block.max())
+        widths = range(0, max(1, maxv.bit_length()) + 1)
+        total += min(_block_cost_bits(block, b) for b in widths)
+    return total
+
+
+def optpfd_encode(gaps: np.ndarray) -> np.ndarray:
+    """Streamable encoding: per block [width|n_exc|n] + packed + exception pairs."""
+    chunks: list[np.ndarray] = []
+    for s in range(0, len(gaps), BLOCK):
+        block = gaps[s : s + BLOCK].astype(np.uint32)
+        maxv = int(block.max()) if len(block) else 0
+        best_b, best_c = 0, None
+        for b in range(0, max(1, maxv.bit_length()) + 1):
+            c = _block_cost_bits(block, b)
+            if best_c is None or c < best_c:
+                best_b, best_c = b, c
+        b = best_b
+        if b < 32:
+            exc_pos = np.nonzero(block >> np.uint32(b))[0]
+        else:
+            exc_pos = np.zeros(0, dtype=np.int64)
+        low = block & ((np.uint32(1) << np.uint32(b)) - np.uint32(1)) if b < 32 else block
+        header = np.array([b | (len(exc_pos) << 8) | (len(block) << 24)], dtype=np.uint32)
+        packed = pack_bits(low, b)
+        exc = np.stack(
+            [exc_pos.astype(np.uint32), (block[exc_pos] >> np.uint32(b))], axis=1
+        ).reshape(-1) if len(exc_pos) else np.zeros(0, np.uint32)
+        chunks += [header, packed, exc]
+    return np.concatenate(chunks) if chunks else np.zeros(0, np.uint32)
+
+
+def optpfd_decode(words: np.ndarray, n: int) -> np.ndarray:
+    out = np.empty(n, dtype=np.uint32)
+    pos, done = 0, 0
+    while done < n:
+        h = int(words[pos]); pos += 1
+        b, n_exc, blen = h & 0xFF, (h >> 8) & 0xFFFF, h >> 24
+        n_words = (blen * b + 31) // 32
+        block = unpack_bits(words[pos : pos + n_words], b, blen)
+        pos += n_words
+        for _ in range(n_exc):
+            p, hi = int(words[pos]), int(words[pos + 1]); pos += 2
+            block[p] |= np.uint32(hi << b)
+        out[done : done + blen] = block
+        done += blen
+    return out
+
+
+# --------------------------------------------------------------------------- Elias-Fano
+def eliasfano_size_bits(doc_ids: np.ndarray, universe: int) -> int:
+    n = len(doc_ids)
+    if n == 0:
+        return 0
+    l = max(0, int(np.floor(np.log2(max(universe, 1) / n))) if universe > n else 0)
+    return n * l + 2 * n + universe // max(1, 2**l) + 2  # low bits + unary high bits
+
+
+def bitvector_size_bits(universe: int) -> int:
+    return universe
+
+
+# --------------------------------------------------------------------------- dispatch
+CODECS = ("optpfd", "varbyte", "eliasfano", "bitvector")
+
+
+def compressed_size_bits(doc_ids: np.ndarray, universe: int, codec: str = "optpfd") -> int:
+    g = dgaps(np.asarray(doc_ids))
+    if codec == "optpfd":
+        return optpfd_size_bits(g)
+    if codec == "varbyte":
+        return varbyte_size_bits(g)
+    if codec == "eliasfano":
+        return eliasfano_size_bits(np.asarray(doc_ids), universe)
+    if codec == "bitvector":
+        return bitvector_size_bits(universe)
+    raise ValueError(f"unknown codec {codec}")
+
+
+def encode_postings(doc_ids: np.ndarray, codec: str = "optpfd") -> np.ndarray:
+    g = dgaps(np.asarray(doc_ids))
+    if codec == "optpfd":
+        return optpfd_encode(g)
+    if codec == "varbyte":
+        return varbyte_encode(g)
+    raise ValueError(f"codec {codec} has size-model only (no bytestream encoder)")
+
+
+def decode_postings(words: np.ndarray, n: int, codec: str = "optpfd") -> np.ndarray:
+    if codec == "optpfd":
+        g = optpfd_decode(words, n)
+    elif codec == "varbyte":
+        g = varbyte_decode(words, n)
+    else:
+        raise ValueError(f"codec {codec} has size-model only (no bytestream decoder)")
+    return undgaps(g)
+
+
+def index_size_bits(
+    term_offsets: np.ndarray, doc_ids: np.ndarray, universe: int, codec: str = "optpfd"
+) -> np.ndarray:
+    """Per-term compressed sizes for a whole index (vector over terms)."""
+    n_terms = len(term_offsets) - 1
+    sizes = np.zeros(n_terms, dtype=np.int64)
+    for t in range(n_terms):
+        lo, hi = term_offsets[t], term_offsets[t + 1]
+        if hi > lo:
+            sizes[t] = compressed_size_bits(doc_ids[lo:hi], universe, codec)
+    return sizes

@@ -1,0 +1,73 @@
+"""List intersection primitives.
+
+CPU-side exact intersection (numpy) for index building / oracles, plus
+jax-native batched intersection over padded posting matrices — the form the
+TPU serving path uses (sorted-list galloping is branchy/serial; on TPU we
+intersect via membership matmuls or packed bitsets — see kernels/bitset).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def intersect_sorted(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Exact sorted-list intersection (numpy oracle)."""
+    return np.intersect1d(a, b, assume_unique=True)
+
+
+def intersect_many(lists: list[np.ndarray]) -> np.ndarray:
+    if not lists:
+        return np.empty(0, dtype=np.int32)
+    cur = lists[0]
+    for nxt in sorted(lists[1:], key=len):
+        if cur.size == 0:
+            break
+        cur = intersect_sorted(cur, nxt)
+    return cur.astype(np.int32)
+
+
+def padded_intersect(
+    lists: jax.Array,  # (n_lists, max_len) int32, -1 padded, sorted rows
+    lengths: jax.Array,  # (n_lists,)
+) -> jax.Array:
+    """Jax-native conjunctive intersection of padded sorted lists.
+
+    Returns a boolean mask over lists[0]: element i survives iff it occurs in
+    every other list. Binary search per element (searchsorted is vectorized).
+    O(L · n_lists · log L) — used by the two-tier tier-1 pass.
+    """
+    base = lists[0]
+    valid = jnp.arange(lists.shape[1]) < lengths[0]
+
+    def one_list(carry, xs):
+        row, ln = xs
+        idx = jnp.searchsorted(row, base)
+        idx = jnp.clip(idx, 0, lists.shape[1] - 1)
+        found = (jnp.take(row, idx) == base) & (idx < ln)
+        return carry & found, None
+
+    mask, _ = jax.lax.scan(one_list, valid, (lists[1:], lengths[1:]))
+    return mask
+
+
+def padded_union(lists: jax.Array, lengths: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Union of padded sorted lists -> (sorted unique ids padded with INT32_MAX, count).
+
+    Used by Algorithm 2: L = ∪ truncated lists.
+    """
+    n, m = lists.shape
+    flat = jnp.where(
+        (jnp.arange(m)[None, :] < lengths[:, None]) & (lists >= 0),
+        lists,
+        jnp.iinfo(jnp.int32).max,
+    ).reshape(-1)
+    s = jnp.sort(flat)
+    is_new = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
+    is_new &= s != jnp.iinfo(jnp.int32).max
+    count = is_new.sum()
+    # stable compaction: sort by (not is_new) keeps unique elements in order
+    order = jnp.argsort(~is_new, stable=True)
+    out = jnp.where(jnp.arange(n * m) < count, s[order], jnp.iinfo(jnp.int32).max)
+    return out, count

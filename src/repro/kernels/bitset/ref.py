@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for packed-bitset AND-reduce + popcount."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitset_and_ref(bitmaps: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """(T, W) u32 maps, (T,) bool validity -> (W,) u32 conjunctive AND.
+
+    Invalid rows act as all-ones (neutral for AND) — matches Algorithm 3's
+    padded query slots.
+    """
+    full = jnp.uint32(0xFFFFFFFF)
+    maps = jnp.where(valid[:, None], bitmaps, full)
+    out = full * jnp.ones_like(bitmaps[0])
+    for t in range(bitmaps.shape[0]):
+        out = out & maps[t]
+    return out
+
+
+def popcount_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """(W,) u32 -> () int32 total set bits."""
+    x = words
+    c = jnp.zeros_like(x)
+    for k in range(32):
+        c = c + ((x >> jnp.uint32(k)) & jnp.uint32(1))
+    return c.astype(jnp.int32).sum()

@@ -1,0 +1,65 @@
+"""Fused membership scoring: (Q,E)x(E,D) MXU matmul + threshold + bit-pack.
+
+TPU adaptation of the paper's f(t, d) hot loop (DESIGN.md §3): instead of a
+per-pair pointer-chase, a whole (128-query × 512-doc) tile is scored on the
+MXU per grid step and immediately reduced to a packed u32 bitmask in VMEM —
+the bitmask is 32× smaller than the logits, so HBM write-back is negligible
+and the op stays compute-bound.
+
+Block shapes: Q_BLK=128 rows (MXU-aligned), D_BLK=512 docs -> 16 output words
+per query row. E (embed dim) is loaded whole per tile: E<=512 fits VMEM
+comfortably (128·512·4B = 256 KiB per operand tile).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLK = 128
+D_BLK = 512
+LANE = 32  # bits per packed word
+
+
+def _membership_kernel(q_ref, d_ref, tau_ref, bias_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)  # (Q_BLK, E)
+    d = d_ref[...].astype(jnp.float32)  # (D_BLK, E)
+    logits = jax.lax.dot_general(
+        q, d, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q_BLK, D_BLK)
+    logits = logits + bias_ref[0]
+    hits = logits >= tau_ref[...][:, None]  # (Q_BLK, D_BLK)
+    # pack 32 doc-lanes per u32 word; little-endian bit order matches ref
+    h = hits.reshape(Q_BLK, D_BLK // LANE, LANE).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(LANE, dtype=jnp.uint32))[None, None, :]
+    out_ref[...] = (h * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def membership_bitmask(
+    q_embed: jax.Array,  # (Q, E), Q % Q_BLK == 0
+    d_embed: jax.Array,  # (D, E), D % D_BLK == 0
+    tau: jax.Array,  # (Q,)
+    bias: jax.Array,  # ()
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    q, e = q_embed.shape
+    d = d_embed.shape[0]
+    assert q % Q_BLK == 0 and d % D_BLK == 0, (q, d)
+    grid = (q // Q_BLK, d // D_BLK)
+    return pl.pallas_call(
+        _membership_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q_BLK, e), lambda i, j: (i, 0)),
+            pl.BlockSpec((D_BLK, e), lambda i, j: (j, 0)),
+            pl.BlockSpec((Q_BLK,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((Q_BLK, D_BLK // LANE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, d // LANE), jnp.uint32),
+        interpret=interpret,
+    )(q_embed, d_embed, tau, jnp.reshape(bias, (1,)))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused membership-scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_bool_u32(bits: jnp.ndarray) -> jnp.ndarray:
+    """(.., D) bool -> (.., D//32) uint32, little-endian bit order. D % 32 == 0."""
+    *lead, d = bits.shape
+    b = bits.reshape(*lead, d // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (b * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def membership_bitmask_ref(
+    q_embed: jnp.ndarray,  # (Q, E) float — query-term embeddings
+    d_embed: jnp.ndarray,  # (D, E) float — doc embeddings
+    tau: jnp.ndarray,  # (Q,) float — per-term thresholds
+    bias: jnp.ndarray,  # () float
+) -> jnp.ndarray:
+    """Returns (Q, D//32) uint32 packed hit-mask: bit set iff logit >= tau."""
+    logits = q_embed.astype(jnp.float32) @ d_embed.astype(jnp.float32).T + bias
+    hits = logits >= tau[:, None]
+    return pack_bool_u32(hits)
+
+
+def membership_logits_ref(q_embed, d_embed, bias):
+    return q_embed.astype(jnp.float32) @ d_embed.astype(jnp.float32).T + bias

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for fixed-width bit-unpack (OptPFD block decode).
+
+uint32-only arithmetic (jax default is 32-bit mode): a width<=32 value spans
+at most two adjacent words; shifts stay in [0, 31] via where-guards.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 128  # values per PFor block (matches index/compress.py)
+
+
+def words_per_block(width: int) -> int:
+    return max(1, (BLOCK * width + 31) // 32)
+
+
+def unpack_block_ref(words: jnp.ndarray, width: int) -> jnp.ndarray:
+    """(.., words_per_block) u32 -> (.., BLOCK) u32 at static bit width.
+
+    Little-endian dense bitstream: value i occupies bits [i*w, (i+1)*w).
+    width == 0 -> all zeros.
+    """
+    lead = words.shape[:-1]
+    if width == 0:
+        return jnp.zeros((*lead, BLOCK), dtype=jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF) if width == 32 else jnp.uint32((1 << width) - 1)
+    bitpos = jnp.arange(BLOCK, dtype=jnp.uint32) * jnp.uint32(width)
+    word_idx = (bitpos // jnp.uint32(32)).astype(jnp.int32)
+    off = bitpos % jnp.uint32(32)
+    lo = jnp.take(words, word_idx, axis=-1) >> off
+    nxt_idx = jnp.minimum(word_idx + 1, words.shape[-1] - 1)
+    nxt = jnp.take(words, nxt_idx, axis=-1)
+    shift = jnp.where(off == 0, jnp.uint32(0), jnp.uint32(32) - off)
+    hi = jnp.where(off == 0, jnp.uint32(0), nxt << shift)
+    return (lo | hi) & mask

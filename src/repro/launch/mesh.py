@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions, not module constants — importing this module never touches jax
+device state (dryrun.py must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.common.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (CPU tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+def mesh_config(multi_pod: bool = False) -> MeshConfig:
+    return (
+        MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+        if multi_pod
+        else MeshConfig(shape=(16, 16), axes=("data", "model"))
+    )

@@ -1,0 +1,93 @@
+"""Serving launcher for the paper's Boolean-query engine.
+
+Builds a synthetic collection, trains the membership model briefly, fits
+zero-FN thresholds, and serves batched conjunctive queries with the chosen
+algorithm. --verified re-checks against tier-2 for exact results.
+
+  PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import CorpusConfig, LearnedIndexConfig, OptimizerConfig
+from repro.core import fit_thresholds, init_membership, membership_loss
+from repro.data.corpus import synthesize_corpus
+from repro.data.loader import membership_batches
+from repro.data.queries import brute_force_answers, sample_queries
+from repro.index.build import build_inverted_index
+from repro.serve import BooleanEngine, ServeConfig
+from repro.train import init_train_state, make_train_step
+
+
+def train_membership(corpus, inv, li_cfg: LearnedIndexConfig, steps=300, lr=0.05):
+    params, _ = init_membership(
+        jax.random.key(0), li_cfg, corpus.n_terms, corpus.n_docs
+    )
+    replaced = np.nonzero(inv.dfs > li_cfg.truncation_k)[0]
+    it = membership_batches(
+        corpus, batch_size=2048,
+        negatives_per_positive=li_cfg.train_negatives_per_positive,
+        replaced_terms=replaced if len(replaced) else None,
+    )
+    ocfg = OptimizerConfig(lr=lr, warmup_steps=20, total_steps=steps, weight_decay=0.0)
+    step = jax.jit(make_train_step(lambda p, b: membership_loss(p, b), ocfg))
+    st = init_train_state(params, ocfg)
+    for i, batch in zip(range(steps), it):
+        params, st, m = step(params, st, {k: jnp.asarray(v) for k, v in batch.items()})
+        if i % 100 == 0:
+            print(f"[serve] membership train step {i} loss {float(m['loss']):.4f}")
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algorithm", default="block",
+                    choices=["exhaustive", "two_tier", "block"])
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--terms", type=int, default=8000)
+    ap.add_argument("--k", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=128)
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true")
+    args = ap.parse_args()
+
+    corpus = synthesize_corpus(
+        CorpusConfig(n_docs=args.docs, n_terms=args.terms, avg_doc_len=80)
+    )
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(
+        embed_dim=64, truncation_k=args.k, block_size=args.block_size
+    )
+    params = train_membership(corpus, inv, li_cfg, steps=args.train_steps)
+    lb = fit_thresholds(params, inv)
+    eng = BooleanEngine(
+        lb, inv, li_cfg,
+        ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
+                    use_kernel=args.use_kernel),
+    )
+    print("[serve] memory report (bits):", eng.memory_report())
+
+    q = sample_queries(corpus, args.queries, seed=3)
+    t0 = time.time()
+    results = eng.query_batch(q)
+    dt = (time.time() - t0) / args.queries * 1e3
+    exact = brute_force_answers(corpus, q)
+    n_exact = sum(np.array_equal(r, e) for r, e in zip(results, exact))
+    n_super = sum(np.setdiff1d(e, r).size == 0 for r, e in zip(results, exact))
+    print(f"[serve] {args.queries} queries, {dt:.2f} ms/query, "
+          f"exact={n_exact}/{args.queries}, superset={n_super}/{args.queries}")
+    if not args.no_verify:
+        assert n_exact == args.queries, "verified mode must be exact"
+        print("[serve] verified mode: all results exact ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Cell factory: (ArchConfig × ShapeSpec) -> step fn + abstract inputs + shardings.
+
+This is the single source of truth used by the dry-run, the smoke tests and
+the real launchers: every cell in the 40-cell assignment grid resolves here.
+
+A cell bundle contains:
+  step          — jittable function (params, *inputs) -> outputs
+  param_specs   — ShapeDtypeStruct pytree for params (via jax.eval_shape)
+  param_axes    — logical-axis pytree (for in_shardings)
+  input_specs   — ShapeDtypeStruct pytree for the data inputs
+  input_axes    — logical axes for the data inputs
+  kind          — train | prefill | decode | serve | retrieval
+
+Axes trees are obtained by running the real init on a structure-preserving
+SKELETON config (tiny dims, same layer/table/feature structure) — axes depend
+only on structure, never on dims, so this is exact and allocation-free at
+full scale (full-scale params exist only as ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig, OptimizerConfig, ShapeSpec, TrainConfig
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import sampler as sampler_mod
+from repro.models import transformer as tf_mod
+from repro.models.attention import KVCache
+from repro.train import init_train_state, make_train_step
+
+# per-shape feature dims where the assignment leaves them open (documented)
+MINIBATCH_D_FEAT = 602  # Reddit-scale node features
+MOLECULE_D_FEAT = 32
+
+
+@dataclass
+class CellBundle:
+    arch: ArchConfig
+    shape: ShapeSpec
+    kind: str
+    step: Callable
+    init_fn: Callable  # key -> params (real arrays; smoke-scale only!)
+    param_specs: Any
+    param_axes: Any
+    input_specs: Any  # pytree of ShapeDtypeStruct
+    input_axes: Any
+    opt_cfg: OptimizerConfig | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def skeleton(cfg: ArchConfig) -> ArchConfig:
+    """Structure-preserving tiny config (same pytree structure, tiny dims)."""
+    kw: dict = {}
+    if cfg.family == "lm":
+        kw = dict(d_model=16, n_heads=2, n_kv_heads=min(cfg.n_kv_heads, 2),
+                  head_dim=8, d_ff=16, vocab_size=32)
+        if cfg.use_mla:
+            kw.update(kv_lora_rank=8, qk_nope_head_dim=8, qk_rope_head_dim=4,
+                      v_head_dim=8, q_lora_rank=8 if cfg.q_lora_rank else None)
+        if cfg.use_moe:
+            kw.update(n_routed_experts=max(2, min(cfg.n_routed_experts, 4)),
+                      top_k=min(cfg.top_k, 2), moe_d_ff=8)
+    elif cfg.family == "gnn":
+        kw = dict(gnn_hidden=8, node_feat_dim=4, edge_feat_dim=cfg.edge_feat_dim,
+                  gnn_out_dim=cfg.gnn_out_dim)
+    elif cfg.family == "recsys":
+        kw = dict(vocab_sizes=tuple(8 for _ in cfg.vocab_sizes), embed_dim=4,
+                  bot_mlp=tuple(8 for _ in cfg.bot_mlp),
+                  top_mlp=tuple(8 for _ in cfg.top_mlp[:-1]) + cfg.top_mlp[-1:]
+                  if cfg.top_mlp else cfg.top_mlp)
+    return dataclasses.replace(cfg, **kw)
+
+
+# ===================================================================== LM
+def _lm_param_dtype(cfg: ArchConfig):
+    # 671B-scale params train in bf16 (+int8 moments) to fit v5e HBM
+    return jnp.bfloat16 if cfg.name.startswith("deepseek-v3") else jnp.float32
+
+
+def _lm_opt_cfg(cfg: ArchConfig) -> OptimizerConfig:
+    return OptimizerConfig(
+        moment_dtype="int8" if cfg.name.startswith("deepseek-v3") else "fp32"
+    )
+
+
+def _cache_axes(cfg: ArchConfig, cache_struct) -> Any:
+    """Build the logical-axes pytree matching init_cache's structure.
+
+    Decode caches shard batch over data and the sequence axis over model
+    (SP — see DESIGN.md §7); stacked groups carry a leading 'layers' axis.
+    """
+    def kv_axes(kv: KVCache, stacked: bool):
+        def one(leaf):
+            base = ["batch", "seq_sharded"] + [None] * (leaf.ndim - 2 - (1 if stacked else 0))
+            return ("layers", *base) if stacked else tuple(base)
+        return KVCache(one(kv.k), one(kv.v))
+
+    out = []
+    for entry in cache_struct:
+        if isinstance(entry, KVCache):
+            out.append(kv_axes(entry, stacked=False))
+        else:
+            out.append([kv_axes(kv, stacked=True) for kv in entry])
+    return out
+
+
+def lm_cell(cfg: ArchConfig, shape: ShapeSpec, *, remat: str = "dots") -> CellBundle:
+    pdtype = _lm_param_dtype(cfg)
+
+    def init_fn(key):
+        return tf_mod.init_lm(key, cfg, pdtype)[0]
+
+    axes = tf_mod.init_lm(jax.random.key(0), skeleton(cfg), pdtype)[1]
+    param_specs = jax.eval_shape(init_fn, jax.random.key(0))
+
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        # remat is applied per-block INSIDE the layer scan (see _scan_groups)
+        loss_fn = lambda p, batch: tf_mod.lm_loss(p, cfg, batch, remat=remat)
+        opt_cfg = _lm_opt_cfg(cfg)
+        train_step = make_train_step(loss_fn, opt_cfg, TrainConfig(remat="none"))
+        inputs = {"tokens": _sds((b, s), jnp.int32), "labels": _sds((b, s), jnp.int32)}
+        in_axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+        return CellBundle(cfg, shape, "train", train_step, init_fn, param_specs, axes,
+                          inputs, in_axes, opt_cfg=opt_cfg)
+
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            caches = tf_mod.init_cache(cfg, b, s, jnp.bfloat16)
+            return tf_mod.lm_prefill(params, cfg, tokens, caches)
+
+        inputs = {"tokens": _sds((b, s), jnp.int32)}
+        return CellBundle(cfg, shape, "prefill", step, init_fn, param_specs, axes,
+                          inputs, {"tokens": ("batch", None)})
+
+    # decode: one new token against a seq_len-deep cache
+    cache_struct = jax.eval_shape(lambda: tf_mod.init_cache(cfg, b, s, jnp.bfloat16))
+
+    def step(params, token, pos, caches):
+        return tf_mod.lm_decode_step(params, cfg, token, pos, caches)
+
+    inputs = {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((b, 1), jnp.int32),
+        "caches": cache_struct,
+    }
+    in_axes = {
+        "token": ("batch", None),
+        "pos": ("batch", None),
+        "caches": _cache_axes(cfg, cache_struct),
+    }
+    return CellBundle(cfg, shape, "decode", step, init_fn, param_specs, axes, inputs, in_axes)
+
+
+# ===================================================================== GNN
+GNN_PAD = 512  # pad node/edge counts to a multiple of every mesh size —
+# 61,859,140 edges % 256 != 0 would silently fall back to REPLICATED edge
+# arrays (measured: 2.2 TB/dev temp on ogb_products; §Perf iteration 2)
+
+
+def _pad_up(n: int, m: int = GNN_PAD) -> int:
+    return -(-n // m) * m
+
+
+def gnn_graph_dims(shape: ShapeSpec) -> tuple[int, int, int]:
+    """(n_nodes, n_edges, d_feat) after padding/flattening rules."""
+    if shape.name == "minibatch_lg":
+        n, e = sampler_mod.subgraph_budget(shape.batch_nodes, shape.fanout)
+        return _pad_up(n), _pad_up(e), MINIBATCH_D_FEAT
+    if shape.name == "molecule":
+        return (
+            _pad_up(shape.n_nodes * shape.n_graphs),
+            _pad_up(shape.n_edges * shape.n_graphs),
+            MOLECULE_D_FEAT,
+        )
+    return _pad_up(shape.n_nodes), _pad_up(shape.n_edges), shape.d_feat
+
+
+def gnn_cell(cfg: ArchConfig, shape: ShapeSpec) -> CellBundle:
+    n, e, d_feat = gnn_graph_dims(shape)
+    cfg = cfg.replace(node_feat_dim=d_feat)
+
+    def init_fn(key):
+        return gnn_mod.init_mgn(key, cfg)[0]
+
+    axes = gnn_mod.init_mgn(jax.random.key(0), skeleton(cfg))[1]
+    param_specs = jax.eval_shape(init_fn, jax.random.key(0))
+    big = n > 500_000  # full-batch giants get per-layer remat (§Perf iter 2)
+    loss_fn = lambda p, batch: gnn_mod.mgn_loss(p, cfg, batch, remat=big)
+    train_step = make_train_step(loss_fn, OptimizerConfig())
+    inputs = {
+        "node_feat": _sds((n, d_feat), jnp.float32),
+        "edge_feat": _sds((e, cfg.edge_feat_dim), jnp.float32),
+        "senders": _sds((e,), jnp.int32),
+        "receivers": _sds((e,), jnp.int32),
+        "node_mask": _sds((n,), jnp.float32),
+        "edge_mask": _sds((e,), jnp.float32),
+        "node_targets": _sds((n, cfg.gnn_out_dim), jnp.float32),
+    }
+    # small graphs: 256-way sharding costs more in collectives than it saves
+    # in HBM (§Perf iteration 4) — shard over data only below ~1M edges
+    nd, ed = ("nodes", "edges") if e >= 1_000_000 else ("nodes_sm", "edges_sm")
+    in_axes = {
+        "node_feat": (nd, None),
+        "edge_feat": (ed, None),
+        "senders": (ed,),
+        "receivers": (ed,),
+        "node_mask": (nd,),
+        "edge_mask": (ed,),
+        "node_targets": (nd, None),
+    }
+    return CellBundle(cfg, shape, "train", train_step, init_fn, param_specs, axes,
+                      inputs, in_axes, opt_cfg=OptimizerConfig())
+
+
+# ===================================================================== RecSys
+def recsys_batch_specs(cfg: ArchConfig, b: int) -> tuple[dict, dict]:
+    if cfg.name == "dlrm-mlperf":
+        sp = {
+            "dense": _sds((b, cfg.n_dense), jnp.float32),
+            "sparse": _sds((b, cfg.n_sparse), jnp.int32),
+            "label": _sds((b,), jnp.float32),
+        }
+        ax = {"dense": ("batch", None), "sparse": ("batch", None), "label": ("batch",)}
+    elif cfg.name == "fm":
+        sp = {"sparse": _sds((b, cfg.n_sparse), jnp.int32), "label": _sds((b,), jnp.float32)}
+        ax = {"sparse": ("batch", None), "label": ("batch",)}
+    else:  # bst, mind
+        sp = {
+            "hist": _sds((b, cfg.hist_len), jnp.int32),
+            "target": _sds((b,), jnp.int32),
+            "label": _sds((b,), jnp.float32),
+        }
+        ax = {"hist": ("batch", None), "target": ("batch",), "label": ("batch",)}
+    return sp, ax
+
+
+def recsys_cell(cfg: ArchConfig, shape: ShapeSpec) -> CellBundle:
+    def init_fn(key):
+        return rec_mod.INIT[cfg.name](key, cfg)[0]
+
+    axes = rec_mod.INIT[cfg.name](jax.random.key(0), skeleton(cfg))[1]
+    param_specs = jax.eval_shape(init_fn, jax.random.key(0))
+    b = shape.global_batch
+
+    if shape.kind == "train":
+        loss_fn = lambda p, batch: rec_mod.recsys_loss(p, cfg, batch)
+        train_step = make_train_step(loss_fn, OptimizerConfig())
+        sp, ax = recsys_batch_specs(cfg, b)
+        return CellBundle(cfg, shape, "train", train_step, init_fn, param_specs, axes,
+                          sp, ax, opt_cfg=OptimizerConfig())
+
+    if shape.kind == "serve":
+        sp, ax = recsys_batch_specs(cfg, b)
+        sp.pop("label"); ax.pop("label")
+
+        def step(params, batch):
+            return rec_mod.FORWARD[cfg.name](params, cfg, batch)
+
+        return CellBundle(cfg, shape, "serve", step, init_fn, param_specs, axes, sp, ax)
+
+    # retrieval: one user context x n_candidates, return top-100
+    sp, ax = recsys_batch_specs(cfg, max(1, b))
+    for k in ("label", "target"):
+        sp.pop(k, None); ax.pop(k, None)
+    sp["candidates"] = _sds((shape.n_candidates,), jnp.int32)
+    ax["candidates"] = ("candidates",)
+
+    def step(params, batch):
+        cand = batch["candidates"]
+        rest = {k: v for k, v in batch.items() if k != "candidates"}
+        scores = rec_mod.RETRIEVAL[cfg.name](params, cfg, rest, cand)
+        return jax.lax.top_k(scores, 100)
+
+    return CellBundle(cfg, shape, "retrieval", step, init_fn, param_specs, axes, sp, ax)
+
+
+# ===================================================================== entry
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, **kw) -> CellBundle:
+    if cfg.family == "lm":
+        return lm_cell(cfg, shape, **kw)
+    if cfg.family == "gnn":
+        return gnn_cell(cfg, shape)
+    if cfg.family == "recsys":
+        return recsys_cell(cfg, shape)
+    raise ValueError(cfg.family)

@@ -1,0 +1,3 @@
+from repro.models import attention, gnn, moe, recsys, sampler, transformer
+
+__all__ = ["attention", "gnn", "moe", "recsys", "sampler", "transformer"]

@@ -1,0 +1,282 @@
+"""Attention variants for the LM family: GQA/MQA, sliding-window, softcap, MLA.
+
+Pure functions over param pytrees. Shapes follow (B, S, H, hd) with GQA via
+head-group einsum (no kv repeat materialization). All masks are additive
+float32 -inf biases computed from position indices so the same code path
+serves train (full causal), prefill, and single-token decode against a cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.common.config import ArchConfig
+from repro.common.sharding import constrain
+
+NEG_INF = -2.0e38
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(dim: int, theta: float, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd) — rotate pairs (x[..., ::2], x[..., 1::2])."""
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ masks
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: int | None = None) -> jax.Array:
+    """(B?, Sq) x (B?, Sk) position ids -> (.., Sq, Sk) additive mask.
+
+    Negative k positions are always masked (ring-buffer slots not yet
+    written report pos < 0 — see _ring_positions).
+    """
+    ok = (k_pos[..., None, :] <= q_pos[..., :, None]) & (k_pos[..., None, :] >= 0)
+    if window is not None:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ GQA
+def init_gqa(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, hq, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "wq": jax.random.normal(ks[0], (d, hq, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (hq, hd, d), dtype) * (1.0 / math.sqrt(hq * hd)),
+    }
+    axes = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    return params, axes
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, Hkv, hd) or MLA: c_kv (B, S_cache, kv_lora)
+    v: jax.Array  # (B, S_cache, Hkv, hd) or MLA: k_rope (B, S_cache, rope_dim)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, n_rep: int) -> jax.Array:
+    """q: (B,Sq,Hq,hd), k: (B,Sk,Hkv,hd) -> (B,Hq,Sq,Sk) without kv repeat."""
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    qg = q.reshape(b, sq, hkv, n_rep, hd)
+    sc = jnp.einsum("bsgrh,btgh->bgrst", qg, k, preferred_element_type=jnp.float32)
+    return sc.reshape(b, hq, sq, sk)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, n_rep: int) -> jax.Array:
+    b, hq, sq, sk = probs.shape
+    hkv = v.shape[2]
+    pg = probs.reshape(b, hkv, n_rep, sq, sk)
+    out = jnp.einsum("bgrst,btgh->bsgrh", pg, v.astype(probs.dtype))
+    return out.reshape(b, sq, hq, v.shape[3])
+
+
+def gqa_attention(
+    params: Any,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, Sq, D)
+    q_pos: jax.Array,  # (B, Sq) absolute positions
+    *,
+    window: int | None = None,
+    cache: KVCache | None = None,
+    cache_len: jax.Array | None = None,  # filled length incl. current tokens
+) -> tuple[jax.Array, KVCache | None]:
+    dtype = x.dtype
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    n_rep = hq // hkv
+    seq_mode = cfg.attn_shard == "seq"
+    q_ax = ("batch", "seq_sharded", "heads", None) if seq_mode else ("batch", None, "heads", None)
+    kv_ax = ("batch", None, "kv_heads", None)  # keys stay seq-replicated (full attn)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype)), *q_ax)
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype)), *kv_ax)
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype)), *kv_ax)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, q_pos)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    sq = x.shape[1]
+    ring = cache is not None and window is not None and cache.k.shape[1] <= window
+    if cache is not None and ring and sq > 1:
+        # local-layer PREFILL: attend in-sequence (mask enforces the window),
+        # then write only the last `cache_len` tokens — their ring slots are
+        # unique, so the scatter is well-defined.
+        mask = causal_mask(q_pos, q_pos, window)[:, None, :, :]
+        k_use, v_use = k, v
+        s_cache = cache.k.shape[1]
+        tail = min(s_cache, sq)
+        slot = q_pos[:, -tail:] % s_cache
+        k_all = _scatter_cache(cache.k, k[:, -tail:], slot)
+        v_all = _scatter_cache(cache.v, v[:, -tail:], slot)
+        new_cache = KVCache(k_all, v_all)
+    elif cache is not None:
+        s_cache = cache.k.shape[1]
+        if ring:
+            slot = q_pos % s_cache  # decode: one unique slot per new token
+            k_pos = _ring_positions(q_pos, s_cache)
+        else:
+            slot = q_pos
+            k_pos = jnp.broadcast_to(
+                jnp.arange(s_cache, dtype=q_pos.dtype)[None, :], (x.shape[0], s_cache)
+            )
+        k_all = _scatter_cache(cache.k, k, slot)
+        v_all = _scatter_cache(cache.v, v, slot)
+        new_cache = KVCache(k_all, v_all)
+        mask = causal_mask(q_pos, k_pos, window)[:, None, :, :]
+        k_use, v_use = k_all, v_all
+    else:
+        new_cache = None
+        mask = causal_mask(q_pos, q_pos, window)[:, None, :, :]
+        k_use, v_use = k, v
+
+    scale = 1.0 / math.sqrt(hd)
+    scores = _gqa_scores(q, k_use, n_rep) * scale  # (B,Hq,Sq,Sk) fp32
+    if seq_mode:
+        scores = constrain(scores, "batch", None, "seq_sharded", None)
+    else:
+        scores = constrain(scores, "batch", "heads", "seq_sharded", None)
+    scores = nn.softcap(scores, cfg.attn_softcap)
+    probs = jax.nn.softmax(scores + mask, axis=-1).astype(dtype)
+    out = _gqa_out(probs, v_use, n_rep)  # (B,Sq,Hq,hd)
+    out = constrain(out, *q_ax)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, new_cache
+
+
+def _scatter_cache(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """cache (B,Sc,...), new (B,Sq,...), slot (B,Sq) -> cache with rows written."""
+    b = cache.shape[0]
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], slot.shape)
+    return cache.at[bidx, slot].set(new.astype(cache.dtype))
+
+
+def _ring_positions(q_pos: jax.Array, s_cache: int) -> jax.Array:
+    """Absolute positions currently living in each ring slot.
+
+    After writing token t at slot t % Sc, slot j holds the largest position
+    p <= max(q_pos) with p % Sc == j.
+    """
+    cur = q_pos.max(axis=-1, keepdims=True)  # (B,1) newest position
+    slots = jnp.arange(s_cache, dtype=q_pos.dtype)[None, :]
+    delta = (cur % s_cache - slots) % s_cache
+    pos = cur - delta
+    return pos  # (B, Sc); positions > cur can't occur; stale slots map to old p
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if cfg.q_lora_rank:
+        ql = cfg.q_lora_rank
+        params["wdq"] = jax.random.normal(ks[0], (d, ql), dtype) * s
+        params["q_norm"], _ = nn.rmsnorm_init(ql, dtype)
+        params["wuq"] = jax.random.normal(ks[1], (ql, h, nope + rope), dtype) / math.sqrt(ql)
+        axes["wdq"] = ("embed", None)
+        axes["q_norm"] = {"scale": (None,)}
+        axes["wuq"] = (None, "heads", None)
+    else:
+        params["wq"] = jax.random.normal(ks[1], (d, h, nope + rope), dtype) * s
+        axes["wq"] = ("embed", "heads", None)
+    params["wdkv"] = jax.random.normal(ks[2], (d, kvl), dtype) * s
+    params["kv_norm"], _ = nn.rmsnorm_init(kvl, dtype)
+    params["wkr"] = jax.random.normal(ks[3], (d, rope), dtype) * s
+    params["wuk"] = jax.random.normal(ks[4], (kvl, h, nope), dtype) / math.sqrt(kvl)
+    params["wuv"] = jax.random.normal(ks[5], (kvl, h, vdim), dtype) / math.sqrt(kvl)
+    params["wo"] = jax.random.normal(ks[6], (h, vdim, d), dtype) / math.sqrt(h * vdim)
+    axes.update(
+        {
+            "wdkv": ("embed", None),
+            "kv_norm": {"scale": (None,)},
+            "wkr": ("embed", None),
+            "wuk": (None, "heads", None),
+            "wuv": (None, "heads", None),
+            "wo": ("heads", None, "embed"),
+        }
+    )
+    return params, axes
+
+
+def mla_attention(
+    params: Any,
+    cfg: ArchConfig,
+    x: jax.Array,
+    q_pos: jax.Array,
+    *,
+    cache: KVCache | None = None,
+    window: int | None = None,  # unused (MLA layers are global)
+) -> tuple[jax.Array, KVCache | None]:
+    """Multi-head Latent Attention (DeepSeek-V2/V3).
+
+    Cache stores the COMPRESSED latent (c_kv, k_rope) — the paper's memory
+    saving — and decode re-expands per step via wuk/wuv.
+    """
+    dtype = x.dtype
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b, sq, _ = x.shape
+
+    if cfg.q_lora_rank:
+        cq = nn.rmsnorm(params["q_norm"], x @ params["wdq"].astype(dtype))
+        q = jnp.einsum("bsl,lhk->bshk", cq, params["wuq"].astype(dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_freqs(rope, cfg.rope_theta, q_pos)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_kv = x @ params["wdkv"].astype(dtype)  # (B,S,kvl)
+    k_r = (x @ params["wkr"].astype(dtype))[:, :, None, :]  # (B,S,1,rope)
+    k_r = apply_rope(k_r, cos, sin)[:, :, 0, :]  # (B,S,rope)
+
+    if cache is not None:
+        s_cache = cache.k.shape[1]
+        ckv_all = _scatter_cache(cache.k, c_kv, q_pos)
+        kr_all = _scatter_cache(cache.v, k_r, q_pos)
+        new_cache = KVCache(ckv_all, kr_all)
+        k_pos = jnp.broadcast_to(jnp.arange(s_cache, dtype=q_pos.dtype)[None, :], (b, s_cache))
+        c_use, kr_use = ckv_all, kr_all
+    else:
+        new_cache = None
+        k_pos = q_pos
+        c_use, kr_use = c_kv, k_r
+
+    c_n = nn.rmsnorm(params["kv_norm"], c_use)
+    k_nope = constrain(jnp.einsum("btl,lhk->bthk", c_n, params["wuk"].astype(dtype)),
+                       "batch", None, "heads", None)
+    v = constrain(jnp.einsum("btl,lhv->bthv", c_n, params["wuv"].astype(dtype)),
+                  "batch", None, "heads", None)
+
+    scale = 1.0 / math.sqrt(nope + rope)
+    sc = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope, preferred_element_type=jnp.float32)
+    sc = sc + jnp.einsum("bshk,btk->bhst", q_rope, kr_use, preferred_element_type=jnp.float32)
+    sc = constrain(sc, "batch", "heads", "seq_sharded", None)
+    mask = causal_mask(q_pos, k_pos)[:, None, :, :]
+    probs = jax.nn.softmax(sc * scale + mask, axis=-1).astype(dtype)
+    out = jnp.einsum("bhst,bthv->bshv", probs, v)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dtype))
+    return y, new_cache

@@ -1,0 +1,108 @@
+"""MeshGraphNet (Pfaff et al., arXiv:2010.03409): encode-process-decode GNN.
+
+Message passing uses jax.ops.segment_sum over an edge-index array — the
+TPU-native form of SpMM aggregation (kernel_taxonomy §GNN): gather node
+states at edge endpoints, MLP the concatenation, scatter-add back.
+
+Graphs are padded to static (n_nodes, n_edges); `node_mask`/`edge_mask`
+zero out padding. The neighbor sampler (minibatch_lg shape) lives in
+sampler.py and produces these padded subgraphs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.common.config import ArchConfig
+
+
+def _mlp_dims(cfg: ArchConfig, d_in: int) -> list[int]:
+    return [d_in] + [cfg.gnn_hidden] * cfg.gnn_mlp_layers
+
+
+def init_mgn(key, cfg: ArchConfig, dtype=jnp.float32) -> tuple[Any, Any]:
+    ks = jax.random.split(key, 4 + cfg.gnn_layers)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    ln_axes = {"scale": (None,), "bias": (None,)}
+    params["node_enc"], axes["node_enc"] = nn.mlp_init(
+        ks[0], _mlp_dims(cfg, cfg.node_feat_dim), dtype=dtype
+    )
+    params["edge_enc"], axes["edge_enc"] = nn.mlp_init(
+        ks[1], _mlp_dims(cfg, cfg.edge_feat_dim), dtype=dtype
+    )
+    # MGN paper: every MLP output is LayerNorm'd except the decoder's
+    params["node_enc_ln"], _ = nn.layernorm_init(cfg.gnn_hidden, dtype)
+    params["edge_enc_ln"], _ = nn.layernorm_init(cfg.gnn_hidden, dtype)
+    axes["node_enc_ln"] = ln_axes
+    axes["edge_enc_ln"] = ln_axes
+    layers = []
+    layer_axes = []
+    for i in range(cfg.gnn_layers):
+        k1, k2 = jax.random.split(ks[2 + i])
+        ep, ea = nn.mlp_init(k1, _mlp_dims(cfg, 3 * cfg.gnn_hidden), dtype=dtype)
+        npp, na = nn.mlp_init(k2, _mlp_dims(cfg, 2 * cfg.gnn_hidden), dtype=dtype)
+        eln, _ = nn.layernorm_init(cfg.gnn_hidden, dtype)
+        nln, _ = nn.layernorm_init(cfg.gnn_hidden, dtype)
+        layers.append({"edge_mlp": ep, "node_mlp": npp, "edge_ln": eln, "node_ln": nln})
+        layer_axes.append(
+            {"edge_mlp": ea, "node_mlp": na, "edge_ln": ln_axes, "node_ln": ln_axes}
+        )
+    params["layers"] = layers
+    axes["layers"] = layer_axes
+    params["decoder"], axes["decoder"] = nn.mlp_init(
+        ks[3], [cfg.gnn_hidden, cfg.gnn_hidden, cfg.gnn_out_dim], dtype=dtype
+    )
+    return params, axes
+
+
+def mgn_forward(
+    params: Any,
+    cfg: ArchConfig,
+    batch: dict[str, jax.Array],
+    remat: bool = False,
+) -> jax.Array:
+    """batch: node_feat (N, F), edge_feat (E, Fe), senders (E,), receivers (E,),
+    node_mask (N,), edge_mask (E,). Returns (N, out_dim)."""
+    v = nn.layernorm(
+        params["node_enc_ln"], nn.mlp(params["node_enc"], batch["node_feat"], act=jax.nn.relu)
+    )
+    e = nn.layernorm(
+        params["edge_enc_ln"], nn.mlp(params["edge_enc"], batch["edge_feat"], act=jax.nn.relu)
+    )
+    snd, rcv = batch["senders"], batch["receivers"]
+    emask = batch["edge_mask"][:, None].astype(v.dtype)
+    n = v.shape[0]
+
+    def one_layer(v, e, layer):
+        # edge update: e' = e + LN(MLP([e, v_src, v_dst]))
+        msg_in = jnp.concatenate([e, v[snd], v[rcv]], axis=-1)
+        upd = nn.layernorm(layer["edge_ln"], nn.mlp(layer["edge_mlp"], msg_in, act=jax.nn.relu))
+        e = e + upd * emask
+        # node update: v' = v + LN(MLP([v, Σ_incoming e']))
+        agg = jax.ops.segment_sum(e * emask, rcv, num_segments=n)
+        if cfg.gnn_aggregator == "mean":
+            deg = jax.ops.segment_sum(emask, rcv, num_segments=n)
+            agg = agg / jnp.maximum(deg, 1.0)
+        v = v + nn.layernorm(
+            layer["node_ln"], nn.mlp(layer["node_mlp"], jnp.concatenate([v, agg], axis=-1), act=jax.nn.relu)
+        )
+        return v, e
+
+    step = jax.checkpoint(one_layer) if remat else one_layer
+    for layer in params["layers"]:
+        v, e = step(v, e, layer)
+
+    return nn.mlp(params["decoder"], v, act=jax.nn.relu)
+
+
+def mgn_loss(params: Any, cfg: ArchConfig, batch: dict[str, jax.Array], remat: bool = False) -> jax.Array:
+    """MSE on node targets, masked over padding."""
+    pred = mgn_forward(params, cfg, batch, remat=remat)
+    mask = batch["node_mask"][:, None].astype(pred.dtype)
+    err = jnp.square(pred - batch["node_targets"]) * mask
+    return err.sum() / jnp.maximum(mask.sum() * cfg.gnn_out_dim, 1.0)

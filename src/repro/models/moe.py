@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN with grouped capacity dispatch (GShard-style) and
+aux-loss-free bias balancing (DeepSeek-V3).
+
+Dispatch strategy (TPU-native, see DESIGN.md §3): routing groups are batch
+rows, so position-within-expert is a cumsum along the LOCAL sequence axis —
+no cross-device scan, no sort. A batched scatter builds (B, E, C, d) expert
+buffers; expert GEMMs run all experts in parallel with E sharded over the
+`model` axis (EP) — XLA inserts the data→expert all-to-all at the sharding
+boundary. Combine is a k-way weighted gather back.
+
+Capacity C = ceil(top_k · S / E · capacity_factor) per group; overflow drops
+to a trash slot (GShard semantics) — the aux-free bias keeps loads even so
+drops are rare.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig
+from repro.common.sharding import constrain
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, e, f = cfg.d_model, cfg.n_routed_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s,
+        "bias": jnp.zeros((e,), jnp.float32),  # aux-loss-free balancing bias
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * s,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * s,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) / math.sqrt(f),
+    }
+    axes = {
+        "router": (None, None),
+        "bias": (None,),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        params["shared_gate"] = jax.random.normal(ks[4], (d, fs), dtype) * s
+        params["shared_up"] = jax.random.normal(jax.random.fold_in(ks[4], 1), (d, fs), dtype) * s
+        params["shared_down"] = jax.random.normal(
+            jax.random.fold_in(ks[4], 2), (fs, d), dtype
+        ) / math.sqrt(fs)
+        axes["shared_gate"] = ("embed", "mlp")
+        axes["shared_up"] = ("embed", "mlp")
+        axes["shared_down"] = ("mlp", "embed")
+    return params, axes
+
+
+def moe_dispatch(params: Any, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Entry point: explicit-a2a expert parallelism when enabled+applicable
+    (token counts and expert counts must divide the mesh), else the grouped
+    pjit path. Both produce identical outputs at equal capacity (tested)."""
+    if getattr(cfg, "moe_a2a", False):
+        from repro.models.moe_a2a import moe_a2a_applicable, moe_ffn_a2a
+
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+        except Exception:
+            mesh = None
+        if mesh is not None and mesh.size > 1 and moe_a2a_applicable(cfg):
+            b, s, d = x.shape
+            dp = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    dp *= mesh.shape[a]
+            mp = mesh.shape.get("model", 1)
+            if b % dp == 0 and (b // dp) * s % mp == 0:
+                y = moe_ffn_a2a(params, cfg, x)
+                if cfg.n_shared_experts:
+                    dtype = x.dtype
+                    hs = jax.nn.silu(x @ params["shared_gate"].astype(dtype)) * (
+                        x @ params["shared_up"].astype(dtype)
+                    )
+                    y = y + hs @ params["shared_down"].astype(dtype)
+                return y
+    return moe_ffn(params, cfg, x)
+
+
+def moe_ffn(params: Any, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). Dispatch groups = batch rows."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_routed_experts, cfg.top_k
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), params["router"]
+    )  # (B,S,E) fp32
+    gate = jax.nn.sigmoid(logits) if cfg.moe_aux_free else jax.nn.softmax(logits, -1)
+    # aux-loss-free: bias steers SELECTION only, not combine weights (dsv3 §3.2)
+    sel = gate + params["bias"][None, None, :] if cfg.moe_aux_free else gate
+    _, top_idx = jax.lax.top_k(sel, k)  # (B,S,k)
+    top_w = jnp.take_along_axis(gate, top_idx, axis=2)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    cf = getattr(cfg, "moe_capacity_factor", CAPACITY_FACTOR)
+    cap = max(1, min(int(math.ceil(k * s / e * cf)), s * k))
+    flat_e = top_idx.reshape(b, s * k)  # (B, S*k) expert of each slot
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (B, S*k, E)
+    pos = ((jnp.cumsum(onehot, axis=1) - 1) * onehot).sum(-1)  # (B, S*k)
+    dropped = pos >= cap
+    pos_c = jnp.where(dropped, cap, pos)  # slot `cap` = trash row
+
+    tok = jnp.arange(s * k) // k  # slot -> token within row
+    bidx = jnp.arange(b)[:, None]
+    buf = jnp.zeros((b, e, cap + 1, d), dtype)
+    buf = buf.at[bidx, flat_e, pos_c].set(x[:, tok])  # slot `cap` collects drops
+    buf = constrain(buf, None, "experts", None, None)  # token a2a to expert shards
+
+    # expert GEMMs — E sharded over `model` (EP); all-to-all at the boundary
+    h_g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(dtype))
+    h_u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(dtype))
+    h = jax.nn.silu(h_g) * h_u
+    out = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dtype))
+    out = constrain(out, None, "experts", None, None)
+
+    slot_out = out[bidx, flat_e, pos_c]  # (B, S*k, d)
+    slot_out = jnp.where(dropped[..., None], 0.0, slot_out)
+    y = (slot_out.reshape(b, s, k, d) * top_w[..., None].astype(dtype)).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        hs = jax.nn.silu(x @ params["shared_gate"].astype(dtype)) * (
+            x @ params["shared_up"].astype(dtype)
+        )
+        y = y + hs @ params["shared_down"].astype(dtype)
+    return y
+
+
+def load_balance_stats(params: Any, cfg: ArchConfig, x: jax.Array) -> dict[str, jax.Array]:
+    """Expert load histogram (for the bias-update controller in train.py)."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    gate = jax.nn.sigmoid(logits) if cfg.moe_aux_free else jax.nn.softmax(logits, -1)
+    _, top_idx = jax.lax.top_k(gate + params["bias"][None, None, :], cfg.top_k)
+    load = jnp.zeros(cfg.n_routed_experts).at[top_idx.reshape(-1)].add(1.0)
+    return {"load": load, "mean": load.mean()}
+
+
+def update_balance_bias(bias: jax.Array, load: jax.Array, lr: float = 1e-3) -> jax.Array:
+    """dsv3 §3.2: nudge bias down for overloaded experts, up for underloaded."""
+    err = load.mean() - load
+    return bias + lr * jnp.sign(err)

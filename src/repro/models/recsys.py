@@ -1,0 +1,295 @@
+"""RecSys family: DLRM (MLPerf), FM, BST, MIND.
+
+Shared substrate:
+  * EmbeddingBag — jnp.take + segment_sum (JAX has no native EmbeddingBag;
+    per kernel_taxonomy §RecSys this IS part of the system). Tables are
+    row-sharded over the `model` axis ("table_vocab" logical axis).
+  * retrieval scoring — one user context against n_candidates items, batched
+    (never a loop): models with a factorized target term (FM, BST, MIND) use
+    their closed form; DLRM broadcasts the shared user-side computation.
+
+Batch layouts:
+  dlrm: dense (B,13) f32, sparse (B,26) i32, label (B,)
+  fm:   sparse (B,39) i32, label (B,)
+  bst:  hist (B,L) i32, target (B,) i32, label (B,)
+  mind: hist (B,L) i32, target (B,) i32, label (B,)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.common.config import ArchConfig
+
+# MLPerf DLRM Criteo-1TB per-field vocabulary sizes (26 categorical fields)
+CRITEO_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+# ------------------------------------------------------------ EmbeddingBag
+def embedding_bag(
+    table: jax.Array,  # (V, D)
+    indices: jax.Array,  # (B, L) int32, -1 = pad
+    *,
+    mode: str = "sum",
+) -> jax.Array:
+    """Multi-hot lookup-reduce: (B, L) ids -> (B, D)."""
+    mask = (indices >= 0).astype(table.dtype)[..., None]
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0, mode="clip") * mask
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(mask.sum(axis=1), 1.0)
+    return out
+
+
+def init_tables(key, vocab_sizes, dim, dtype=jnp.float32, scale=0.01):
+    tables, axes = [], []
+    for i, v in enumerate(vocab_sizes):
+        k = jax.random.fold_in(key, i)
+        tables.append(jax.random.normal(k, (v, dim), dtype) * scale)
+        axes.append(("table_vocab", None))
+    return tables, axes
+
+
+# ------------------------------------------------------------------ DLRM
+def init_dlrm(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["tables"], axes["tables"] = init_tables(ks[0], cfg.vocab_sizes, cfg.embed_dim, dtype)
+    params["bot"], axes["bot"] = nn.mlp_init(ks[1], [cfg.n_dense, *cfg.bot_mlp], dtype=dtype)
+    n_f = cfg.n_sparse + 1
+    n_int = n_f * (n_f - 1) // 2
+    top_in = n_int + cfg.bot_mlp[-1]
+    params["top"], axes["top"] = nn.mlp_init(ks[2], [top_in, *cfg.top_mlp], dtype=dtype)
+    return params, axes
+
+
+def _dlrm_interact(emb: jax.Array) -> jax.Array:
+    """emb (B, F, D) -> upper-triangle of emb @ embᵀ, (B, F(F-1)/2)."""
+    b, f, d = emb.shape
+    z = jnp.einsum("bfd,bgd->bfg", emb, emb)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return z[:, iu, ju]
+
+
+def dlrm_forward(params, cfg: ArchConfig, batch) -> jax.Array:
+    x = nn.mlp(params["bot"], batch["dense"], act=jax.nn.relu, final_act=jax.nn.relu)
+    embs = [
+        jnp.take(t, batch["sparse"][:, i], axis=0, mode="clip") for i, t in enumerate(params["tables"])
+    ]
+    emb = jnp.stack([x, *embs], axis=1)  # (B, 27, D)
+    inter = _dlrm_interact(emb)
+    top_in = jnp.concatenate([x, inter], axis=-1)
+    return nn.mlp(params["top"], top_in, act=jax.nn.relu)[..., 0]
+
+
+def dlrm_retrieval(params, cfg: ArchConfig, batch, candidates: jax.Array) -> jax.Array:
+    """Score 1 user context x C candidate items in sparse field 0."""
+    x = nn.mlp(params["bot"], batch["dense"], act=jax.nn.relu, final_act=jax.nn.relu)  # (1, D)
+    fixed = [
+        jnp.take(t, batch["sparse"][:, i], axis=0, mode="clip")
+        for i, t in enumerate(params["tables"])
+        if i != 0
+    ]
+    c = candidates.shape[0]
+    cand_emb = jnp.take(params["tables"][0], candidates, axis=0, mode="clip")  # (C, D)
+    user = jnp.stack([x[0], *[f[0] for f in fixed]], axis=0)  # (F, D)
+    # broadcast: emb (C, F+1, D) with candidate in slot 1
+    emb = jnp.concatenate(
+        [
+            jnp.broadcast_to(user[None, :1], (c, 1, user.shape[1])),
+            cand_emb[:, None],
+            jnp.broadcast_to(user[None, 1:], (c, user.shape[0] - 1, user.shape[1])),
+        ],
+        axis=1,
+    )
+    inter = _dlrm_interact(emb)
+    top_in = jnp.concatenate([jnp.broadcast_to(x, (c, x.shape[1])), inter], axis=-1)
+    return nn.mlp(params["top"], top_in, act=jax.nn.relu)[..., 0]
+
+
+# ------------------------------------------------------------------ FM
+def init_fm(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    params: dict[str, Any] = {"w0": jnp.zeros((), dtype)}
+    axes: dict[str, Any] = {"w0": ()}
+    params["tables"], axes["tables"] = init_tables(ks[0], cfg.vocab_sizes, cfg.embed_dim, dtype)
+    params["linear"], axes["linear"] = init_tables(ks[1], cfg.vocab_sizes, 1, dtype)
+    return params, axes
+
+
+def fm_forward(params, cfg: ArchConfig, batch) -> jax.Array:
+    """Rendle's O(nk) sum-square trick: ½[(Σv)² − Σv²]."""
+    vs = jnp.stack(
+        [jnp.take(t, batch["sparse"][:, i], axis=0, mode="clip") for i, t in enumerate(params["tables"])],
+        axis=1,
+    )  # (B, F, K)
+    lin = jnp.stack(
+        [jnp.take(t, batch["sparse"][:, i], axis=0, mode="clip") for i, t in enumerate(params["linear"])],
+        axis=1,
+    ).sum(axis=(1, 2))
+    s = vs.sum(axis=1)
+    pair = 0.5 * (jnp.square(s) - jnp.square(vs).sum(axis=1)).sum(axis=-1)
+    return params["w0"] + lin + pair
+
+
+def fm_retrieval(params, cfg: ArchConfig, batch, candidates: jax.Array) -> jax.Array:
+    """Factorized: score(c) = base + lin_c + v_c·S, S = Σ_{f≠0} v_f."""
+    vs = jnp.stack(
+        [jnp.take(t, batch["sparse"][:, i], axis=0, mode="clip") for i, t in enumerate(params["tables"])],
+        axis=1,
+    )[0]  # (F, K) single user
+    lin_fixed = jnp.stack(
+        [jnp.take(t, batch["sparse"][:, i], axis=0, mode="clip") for i, t in enumerate(params["linear"])],
+        axis=1,
+    )[0, 1:].sum()
+    s_fixed = vs[1:].sum(axis=0)  # (K,)
+    pair_fixed = 0.5 * (jnp.square(s_fixed) - jnp.square(vs[1:]).sum(axis=0)).sum()
+    v_c = jnp.take(params["tables"][0], candidates, axis=0, mode="clip")  # (C, K)
+    lin_c = jnp.take(params["linear"][0], candidates, axis=0, mode="clip")[:, 0]
+    return params["w0"] + lin_fixed + pair_fixed + lin_c + v_c @ s_fixed
+
+
+# ------------------------------------------------------------------ BST
+def init_bst(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    seq = cfg.hist_len + 1
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["item_table"] = jax.random.normal(ks[0], (cfg.vocab_sizes[0], d), dtype) * 0.01
+    axes["item_table"] = ("table_vocab", None)
+    params["pos_table"] = jax.random.normal(ks[1], (seq, d), dtype) * 0.01
+    axes["pos_table"] = (None, None)
+    s = 1.0 / math.sqrt(d)
+    params["attn"] = {
+        "wq": jax.random.normal(ks[2], (d, cfg.n_heads, d // cfg.n_heads), dtype) * s,
+        "wk": jax.random.normal(jax.random.fold_in(ks[2], 1), (d, cfg.n_heads, d // cfg.n_heads), dtype) * s,
+        "wv": jax.random.normal(jax.random.fold_in(ks[2], 2), (d, cfg.n_heads, d // cfg.n_heads), dtype) * s,
+        "wo": jax.random.normal(jax.random.fold_in(ks[2], 3), (cfg.n_heads, d // cfg.n_heads, d), dtype) * s,
+    }
+    axes["attn"] = {
+        "wq": (None, "heads", None),
+        "wk": (None, "heads", None),
+        "wv": (None, "heads", None),
+        "wo": ("heads", None, None),
+    }
+    params["ffn"], axes["ffn"] = nn.mlp_init(ks[3], [d, 4 * d, d], dtype=dtype)
+    params["ln1"], _ = nn.layernorm_init(d, dtype)
+    params["ln2"], _ = nn.layernorm_init(d, dtype)
+    axes["ln1"] = {"scale": (None,), "bias": (None,)}
+    axes["ln2"] = {"scale": (None,), "bias": (None,)}
+    params["mlp"], axes["mlp"] = nn.mlp_init(ks[4], [seq * d, *cfg.top_mlp, 1], dtype=dtype)
+    return params, axes
+
+
+def _bst_encode(params, cfg: ArchConfig, items: jax.Array) -> jax.Array:
+    """items (B, L+1) -> transformer output (B, (L+1)·D)."""
+    d = cfg.embed_dim
+    x = jnp.take(params["item_table"], items, axis=0, mode="clip") + params["pos_table"][None]
+    h = nn.layernorm(params["ln1"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wv"])
+    sc = jnp.einsum("bshk,bthk->bhst", q, k) / math.sqrt(d // cfg.n_heads)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhst,bthk->bshk", p, v)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, params["attn"]["wo"])
+    h = nn.layernorm(params["ln2"], x)
+    x = x + nn.mlp(params["ffn"], h, act=jax.nn.leaky_relu)
+    return x.reshape(x.shape[0], -1)
+
+
+def bst_forward(params, cfg: ArchConfig, batch) -> jax.Array:
+    items = jnp.concatenate([batch["hist"], batch["target"][:, None]], axis=1)
+    flat = _bst_encode(params, cfg, items)
+    return nn.mlp(params["mlp"], flat, act=jax.nn.leaky_relu)[..., 0]
+
+
+def bst_retrieval(params, cfg: ArchConfig, batch, candidates: jax.Array) -> jax.Array:
+    """1 user history x C candidates: target slot varies over candidates."""
+    c = candidates.shape[0]
+    hist = jnp.broadcast_to(batch["hist"][:1], (c, batch["hist"].shape[1]))
+    return bst_forward(params, cfg, {"hist": hist, "target": candidates})
+
+
+# ------------------------------------------------------------------ MIND
+def init_mind(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["item_table"] = jax.random.normal(ks[0], (cfg.vocab_sizes[0], d), dtype) * 0.01
+    axes["item_table"] = ("table_vocab", None)
+    # shared bilinear map S (capsule routing, B2I variant)
+    params["s_map"] = jax.random.normal(ks[1], (d, d), dtype) / math.sqrt(d)
+    axes["s_map"] = (None, None)
+    # fixed (non-trainable in paper; trainable here) routing init logits
+    params["b_init"] = jax.random.normal(ks[2], (cfg.n_interests, cfg.hist_len), dtype) * 0.1
+    axes["b_init"] = (None, None)
+    return params, axes
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    n2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params, cfg: ArchConfig, hist: jax.Array) -> jax.Array:
+    """Behavior→Interest dynamic routing: (B, L) ids -> (B, J, D) capsules."""
+    e = jnp.take(params["item_table"], hist, axis=0, mode="clip")  # (B, L, D)
+    eh = e @ params["s_map"]  # (B, L, D)
+    mask = (hist >= 0).astype(eh.dtype)
+    b_log = jnp.broadcast_to(params["b_init"][None], (e.shape[0], *params["b_init"].shape))
+    u = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_log, axis=1)  # over interests
+        w = w * mask[:, None, :]
+        z = jnp.einsum("bjl,bld->bjd", w, eh)
+        u = _squash(z)
+        b_log = b_log + jnp.einsum("bjd,bld->bjl", u, eh)
+    return u
+
+
+def mind_forward(params, cfg: ArchConfig, batch) -> jax.Array:
+    """Label-aware: score = max_j u_j · target (serving form, MIND §4)."""
+    u = mind_interests(params, cfg, batch["hist"])  # (B, J, D)
+    t = jnp.take(params["item_table"], batch["target"], axis=0, mode="clip")  # (B, D)
+    scores = jnp.einsum("bjd,bd->bj", u, t)
+    return scores.max(axis=-1)
+
+
+def mind_retrieval(params, cfg: ArchConfig, batch, candidates: jax.Array) -> jax.Array:
+    u = mind_interests(params, cfg, batch["hist"][:1])  # (1, J, D)
+    cand = jnp.take(params["item_table"], candidates, axis=0, mode="clip")  # (C, D)
+    scores = jnp.einsum("jd,cd->cj", u[0], cand)
+    return scores.max(axis=-1)
+
+
+# ------------------------------------------------------------------ losses
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(
+        -(labels * jax.nn.log_sigmoid(logits) + (1 - labels) * jax.nn.log_sigmoid(-logits))
+    )
+
+
+FORWARD = {"dlrm-mlperf": dlrm_forward, "fm": fm_forward, "bst": bst_forward, "mind": mind_forward}
+RETRIEVAL = {
+    "dlrm-mlperf": dlrm_retrieval,
+    "fm": fm_retrieval,
+    "bst": bst_retrieval,
+    "mind": mind_retrieval,
+}
+INIT = {"dlrm-mlperf": init_dlrm, "fm": init_fm, "bst": init_bst, "mind": init_mind}
+
+
+def recsys_loss(params, cfg: ArchConfig, batch) -> jax.Array:
+    return bce_loss(FORWARD[cfg.name](params, cfg, batch), batch["label"])

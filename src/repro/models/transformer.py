@@ -1,0 +1,359 @@
+"""The LM family: one decoder implementation covering all five assigned archs.
+
+Features selected per ArchConfig:
+  * GQA / MQA (phi4-mini, gemma, gemma2) or MLA (deepseek-v2-lite, -v3)
+  * RoPE, SwiGLU / GeGLU, RMSNorm (gemma (1+scale) convention)
+  * gemma2: local(window)+global alternation, attn & final logit softcaps,
+    post-attention/post-ffn norms, embedding scale sqrt(d_model)
+  * deepseek MoE: shared+routed experts, top-k, aux-loss-free bias, first
+    k layers dense; dsv3 MTP head (one extra block predicting token t+2)
+  * scan-over-layers (one scan per homogeneous layer group) keeps HLO size
+    and compile time bounded at 61 layers
+
+Layer groups: layers are partitioned into (dense-prefix, scanned-periodic)
+groups; within a scan step all `period` attention types run (gemma2: local
+then global), so stacked params have leading dim n_layers // period.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.common.config import ArchConfig
+from repro.common.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+
+
+# ------------------------------------------------------------------ FFN
+def init_ffn(key, cfg: ArchConfig, dtype=jnp.float32, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "w_gate": jax.random.normal(ks[0], (d, f), dtype) * s,
+        "w_up": jax.random.normal(ks[1], (d, f), dtype) * s,
+        "w_down": jax.random.normal(ks[2], (f, d), dtype) / math.sqrt(f),
+    }
+    axes = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    return params, axes
+
+
+def ffn(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    g = constrain(x @ params["w_gate"].astype(dtype), "batch", None, "mlp")
+    u = constrain(x @ params["w_up"].astype(dtype), "batch", None, "mlp")
+    act = jax.nn.gelu(g, approximate=True) if cfg.activation == "geglu" else jax.nn.silu(g)
+    return (act * u) @ params["w_down"].astype(dtype)
+
+
+# ------------------------------------------------------------------ block
+def init_block(key, cfg: ArchConfig, layer_idx: int, dtype=jnp.float32):
+    """One transformer block; layer_idx selects attn type + dense/moe ffn."""
+    ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if cfg.use_mla:
+        params["attn"], axes["attn"] = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        params["attn"], axes["attn"] = attn.init_gqa(ks[0], cfg, dtype)
+    use_moe = cfg.use_moe and layer_idx >= cfg.first_dense_layers
+    if use_moe:
+        params["ffn"], axes["ffn"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        params["ffn"], axes["ffn"] = init_ffn(ks[1], cfg, dtype)
+    params["ln1"], _ = nn.rmsnorm_init(cfg.d_model, dtype)
+    params["ln2"], _ = nn.rmsnorm_init(cfg.d_model, dtype)
+    axes["ln1"] = {"scale": (None,)}
+    axes["ln2"] = {"scale": (None,)}
+    if cfg.name.startswith("gemma2"):  # post-norms (gemma2 only)
+        params["post_ln1"], _ = nn.rmsnorm_init(cfg.d_model, dtype)
+        params["post_ln2"], _ = nn.rmsnorm_init(cfg.d_model, dtype)
+        axes["post_ln1"] = {"scale": (None,)}
+        axes["post_ln2"] = {"scale": (None,)}
+    return params, axes
+
+
+def block_forward(
+    params,
+    cfg: ArchConfig,
+    layer_idx: int,
+    x: jax.Array,
+    q_pos: jax.Array,
+    cache: attn.KVCache | None = None,
+) -> tuple[jax.Array, attn.KVCache | None]:
+    a_type = cfg.attn_types[layer_idx % len(cfg.attn_types)]
+    window = cfg.window_size if a_type == "local" else None
+    x = constrain(x, "batch", None, None)
+    h = nn.rmsnorm(params["ln1"], x, eps=cfg.norm_eps)
+    if cfg.use_mla:
+        a, new_cache = attn.mla_attention(params["attn"], cfg, h, q_pos, cache=cache)
+    else:
+        a, new_cache = attn.gqa_attention(
+            params["attn"], cfg, h, q_pos, window=window, cache=cache
+        )
+    if "post_ln1" in params:
+        a = nn.rmsnorm(params["post_ln1"], a, eps=cfg.norm_eps)
+    x = x + a
+    h = nn.rmsnorm(params["ln2"], x, eps=cfg.norm_eps)
+    use_moe = cfg.use_moe and layer_idx >= cfg.first_dense_layers
+    f = moe_mod.moe_dispatch(params["ffn"], cfg, h) if use_moe else ffn(params["ffn"], cfg, h)
+    if "post_ln2" in params:
+        f = nn.rmsnorm(params["post_ln2"], f, eps=cfg.norm_eps)
+    return x + f, new_cache
+
+
+# ------------------------------------------------------------------ model
+class LMParams(NamedTuple):
+    embed: Any
+    prefix: list  # unstacked dense-prefix blocks
+    stacked: Any  # scanned blocks: leaves have leading dim n_scan
+    final_norm: Any
+    lm_head: Any | None  # None = tied embeddings
+    mtp: Any | None  # dsv3 multi-token-prediction block
+
+
+def _layer_split(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_prefix, n_scan_groups, period)."""
+    period = len(cfg.attn_types)
+    n_prefix = cfg.first_dense_layers if cfg.use_moe else 0
+    rest = cfg.n_layers - n_prefix
+    assert rest % period == 0, (cfg.n_layers, n_prefix, period)
+    return n_prefix, rest // period, period
+
+
+def init_lm(key, cfg: ArchConfig, dtype=jnp.float32) -> tuple[LMParams, LMParams]:
+    n_prefix, n_groups, period = _layer_split(cfg)
+    keys = jax.random.split(key, 4 + n_prefix)
+    embed_p, embed_a = nn.embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype=dtype)
+
+    prefix_p, prefix_a = [], []
+    for i in range(n_prefix):
+        p, a = init_block(keys[4 + i], cfg, i, dtype)
+        prefix_p.append(p)
+        prefix_a.append(a)
+
+    # stacked groups: init one group then vmap-stack across n_groups
+    def init_group(k):
+        ps, as_ = [], []
+        for j in range(period):
+            p, a = init_block(jax.random.fold_in(k, j), cfg, n_prefix + j, dtype)
+            ps.append(p)
+            as_.append(a)
+        return ps, as_
+
+    group_keys = jax.random.split(keys[1], max(n_groups, 1))
+    _, group_axes = init_group(group_keys[0])
+    stacked_p = jax.vmap(lambda k: init_group(k)[0])(group_keys)
+    stacked_a = jax.tree.map(lambda ax: ("layers", *ax) if isinstance(ax, tuple) else ax, group_axes,
+                             is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x))
+
+    fn_p, _ = nn.rmsnorm_init(cfg.d_model, dtype)
+    head_p = None
+    head_a = None
+    if not cfg.tie_embeddings:
+        head_p, head_a = nn.dense_init(
+            keys[2], cfg.d_model, cfg.vocab_size, axes=(None, "vocab"), dtype=dtype
+        )
+    mtp_p = mtp_a = None
+    if cfg.use_mtp:
+        mtp_p, mtp_a = init_block(keys[3], cfg, cfg.n_layers - 1, dtype)
+
+    params = LMParams(embed_p, prefix_p, stacked_p, fn_p, head_p, mtp_p)
+    axes = LMParams(
+        embed_a,
+        prefix_a,
+        stacked_a,
+        {"scale": (None,)},
+        head_a,
+        mtp_a,
+    )
+    return params, axes
+
+
+def _maybe_remat(fn, remat: str):
+    """Per-BLOCK remat. Must wrap the scan body — an outer jax.checkpoint
+    around the whole loss cannot stop scan from stacking every step's
+    residuals (measured: 18-layer gemma-2b saves 4x (L,B,S,D) f32 without it).
+    """
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # 'full': save nothing, recompute the block
+
+
+def _scan_groups(params: LMParams, cfg: ArchConfig, x, q_pos, caches=None, remat: str = "none"):
+    """Run prefix blocks then the scanned periodic groups."""
+    n_prefix, n_groups, period = _layer_split(cfg)
+    new_caches: list[Any] = []
+    ci = 0
+    for i, bp in enumerate(params.prefix):
+        c = caches[ci] if caches is not None else None
+        if c is None:
+            fn = _maybe_remat(
+                lambda x, sub, i=i: block_forward(sub, cfg, i, x, q_pos, None)[0], remat
+            )
+            x, nc = fn(x, bp), None
+        else:
+            x, nc = block_forward(bp, cfg, i, x, q_pos, c)
+        new_caches.append(nc)
+        ci += 1
+
+    if n_groups > 0:
+        if caches is None:
+
+            def step(x, group_p):
+                for j in range(period):
+                    fn = _maybe_remat(
+                        lambda x, sub, j=j: block_forward(
+                            sub, cfg, n_prefix + j, x, q_pos, None
+                        )[0],
+                        remat,
+                    )
+                    x = fn(x, group_p[j])
+                return x, None
+
+            x, _ = jax.lax.scan(step, x, params.stacked)
+        else:
+            # caches for scanned layers are stacked (n_groups, ...) pytrees
+            def step(x, xs):
+                group_p, group_c = xs
+                ncs = []
+                for j in range(period):
+                    x, nc = block_forward(group_p[j], cfg, n_prefix + j, x, q_pos, group_c[j])
+                    ncs.append(nc)
+                return x, ncs
+
+            x, scanned_caches = jax.lax.scan(step, x, (params.stacked, caches[ci]))
+            new_caches.append(scanned_caches)
+    return x, new_caches
+
+
+def lm_logits(params: LMParams, cfg: ArchConfig, tokens: jax.Array, compute_dtype=jnp.bfloat16,
+              remat: str = "none"):
+    """tokens (B, S) -> logits (B, S, V). Training/prefill path (no cache)."""
+    x = nn.embed(params.embed, tokens, compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    b, s = tokens.shape
+    # row-shared positions: (1,S) keeps the causal mask batch-free (1,1,S,S)
+    q_pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    x, _ = _scan_groups(params, cfg, x, q_pos, remat=remat)
+    x = nn.rmsnorm(params.final_norm, x, eps=cfg.norm_eps)
+    table = params.embed["table"] if params.lm_head is None else params.lm_head["w"]
+    logits = x @ (table.T if params.lm_head is None else table).astype(compute_dtype)
+    return nn.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def lm_loss(params: LMParams, cfg: ArchConfig, batch: dict, compute_dtype=jnp.bfloat16,
+            remat: str = "none"):
+    logits = lm_logits(params, cfg, batch["tokens"], compute_dtype, remat=remat)
+    labels = batch["labels"]
+    # CE via logsumexp: avoids materializing a second (B,S,V) log-softmax buffer
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    loss = (lse - picked).mean()
+    if cfg.use_mtp and params.mtp is not None:
+        # MTP: predict t+2 from the backbone's hidden states via one extra
+        # block (dsv3 §2.2, single-depth variant). Shares embed/head.
+        x = nn.embed(params.embed, batch["tokens"], compute_dtype)
+        b, s = batch["tokens"].shape
+        q_pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+        h, _ = block_forward(params.mtp, cfg, cfg.n_layers - 1, x, q_pos)
+        h = nn.rmsnorm(params.final_norm, h, eps=cfg.norm_eps)
+        table = params.embed["table"] if params.lm_head is None else params.lm_head["w"]
+        mtp_logits = h @ (table.T if params.lm_head is None else table).astype(compute_dtype)
+        mtp_logits = nn.softcap(mtp_logits.astype(jnp.float32), cfg.logit_softcap)
+        # labels shifted one extra step
+        mtp_lse = jax.nn.logsumexp(mtp_logits[:, :-1], axis=-1)
+        mtp_labels = labels[:, 1:]
+        mtp_picked = jnp.take_along_axis(
+            mtp_logits[:, :-1], mtp_labels[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        loss = loss + 0.3 * (mtp_lse - mtp_picked).mean()
+    return loss
+
+
+# ------------------------------------------------------------------ serving
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int) -> list:
+    """Layer-ordered list of KVCache shapes (prefix..., stacked-group)."""
+    n_prefix, n_groups, period = _layer_split(cfg)
+    specs = []
+
+    def one(layer_idx):
+        a_type = cfg.attn_types[layer_idx % len(cfg.attn_types)]
+        s_cache = min(max_len, cfg.window_size) if a_type == "local" else max_len
+        if cfg.use_mla:
+            return (
+                (batch, s_cache, cfg.kv_lora_rank),
+                (batch, s_cache, cfg.qk_rope_head_dim),
+            )
+        hd = cfg.resolved_head_dim
+        return (
+            (batch, s_cache, cfg.n_kv_heads, hd),
+            (batch, s_cache, cfg.n_kv_heads, hd),
+        )
+
+    for i in range(n_prefix):
+        specs.append(one(i))
+    group = [one(n_prefix + j) for j in range(period)]
+    if n_groups > 0:
+        specs.append([((n_groups, *k), (n_groups, *v)) for k, v in group])
+    return specs
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    specs = cache_spec(cfg, batch, max_len)
+    out = []
+    for sp in specs[:-1] if _layer_split(cfg)[1] > 0 else specs:
+        out.append(attn.KVCache(jnp.zeros(sp[0], dtype), jnp.zeros(sp[1], dtype)))
+    if _layer_split(cfg)[1] > 0:
+        group = specs[-1]
+        out.append([attn.KVCache(jnp.zeros(k, dtype), jnp.zeros(v, dtype)) for k, v in group])
+    return out
+
+
+def lm_decode_step(
+    params: LMParams,
+    cfg: ArchConfig,
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # (B, 1) int32 absolute position of `token`
+    caches,
+    compute_dtype=jnp.bfloat16,
+):
+    """One serving step: new token + caches -> (logits (B, V), new caches)."""
+    x = nn.embed(params.embed, token, compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    x, new_caches = _scan_groups(params, cfg, x, pos, caches)
+    x = nn.rmsnorm(params.final_norm, x, eps=cfg.norm_eps)
+    table = params.embed["table"] if params.lm_head is None else params.lm_head["w"]
+    logits = x[:, 0] @ (table.T if params.lm_head is None else table).astype(compute_dtype)
+    return nn.softcap(logits.astype(jnp.float32), cfg.logit_softcap), new_caches
+
+
+def lm_prefill(
+    params: LMParams,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # (B, S)
+    caches,
+    compute_dtype=jnp.bfloat16,
+):
+    """Prefill: run the full prompt, writing caches; returns last-pos logits."""
+    x = nn.embed(params.embed, tokens, compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    b, s = tokens.shape
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    x, new_caches = _scan_groups(params, cfg, x, q_pos, caches)
+    x = nn.rmsnorm(params.final_norm, x, eps=cfg.norm_eps)
+    table = params.embed["table"] if params.lm_head is None else params.lm_head["w"]
+    logits = x[:, -1] @ (table.T if params.lm_head is None else table).astype(compute_dtype)
+    return nn.softcap(logits.astype(jnp.float32), cfg.logit_softcap), new_caches

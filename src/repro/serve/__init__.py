@@ -1,0 +1,3 @@
+from repro.serve.boolean import BooleanEngine, ServeConfig
+
+__all__ = ["BooleanEngine", "ServeConfig"]

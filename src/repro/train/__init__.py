@@ -1,0 +1,21 @@
+from repro.train.optimizer import (
+    AdamState,
+    adam_update,
+    init_adam,
+    lr_schedule,
+    quantize_blockwise,
+    dequantize_blockwise,
+)
+from repro.train.steps import init_train_state, make_eval_step, make_train_step
+
+__all__ = [
+    "AdamState",
+    "adam_update",
+    "init_adam",
+    "lr_schedule",
+    "quantize_blockwise",
+    "dequantize_blockwise",
+    "init_train_state",
+    "make_eval_step",
+    "make_train_step",
+]

@@ -1,0 +1,84 @@
+"""train_step / eval_step factories: grad accumulation, remat, sharding.
+
+The factory closes over a pure loss_fn(params, batch) -> scalar and an
+OptimizerConfig; the returned step is jit-able and mesh-agnostic (sharding
+comes from in_shardings at jit time, see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import OptimizerConfig, TrainConfig
+from repro.train.optimizer import AdamState, adam_update, init_adam
+
+
+def apply_remat(loss_fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return loss_fn
+    if policy == "full":
+        return jax.checkpoint(loss_fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            loss_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    raise ValueError(f"unknown remat policy {policy}")
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    opt_cfg: OptimizerConfig,
+    train_cfg: TrainConfig | None = None,
+    *,
+    n_microbatches: int = 1,
+):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    n_microbatches > 1 runs sequential grad accumulation via lax.scan — the
+    standard memory/batch trade at scale (activations live one microbatch at
+    a time).
+    """
+    remat_policy = train_cfg.remat if train_cfg is not None else "none"
+    lfn = apply_remat(loss_fn, remat_policy)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lfn)(params, batch)
+
+    def step(params, opt_state: AdamState, batch):
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_microbatches, x.shape[0] // n_microbatches, *x.shape[1:]),
+                batch,
+            )
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                return (loss_acc + loss, jax.tree.map(jnp.add, g_acc, g)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zero), micro)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        params, opt_state, metrics = adam_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(loss_fn: Callable):
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step
+
+
+def init_train_state(params: Any, opt_cfg: OptimizerConfig) -> AdamState:
+    return init_adam(params, opt_cfg)

@@ -1,0 +1,159 @@
+"""The paper's core: membership model, learned Bloom guarantees, Algorithms
+1-3 correctness, Eq.(2) gain estimator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import CorpusConfig, LearnedIndexConfig
+from repro.core import (
+    build_engine,
+    estimate_gain,
+    exhaustive_query,
+    false_negative_rate,
+    false_positive_rate,
+    fit_thresholds,
+    gain_curve,
+    init_membership,
+    membership_loss,
+    pair_logits,
+    run_queries,
+    storage_fraction_curve,
+    term_doc_logits,
+    two_tier_guaranteed,
+)
+from repro.data.corpus import synthesize_corpus
+from repro.data.queries import brute_force_answers, sample_queries
+from repro.index.build import build_inverted_index
+
+K, BLOCK = 24, 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    corpus = synthesize_corpus(CorpusConfig(n_docs=400, n_terms=1500, avg_doc_len=50, seed=2))
+    inv = build_inverted_index(corpus)
+    cfg = LearnedIndexConfig(embed_dim=16, truncation_k=K, block_size=BLOCK)
+    params, axes = init_membership(jax.random.key(0), cfg, corpus.n_terms, corpus.n_docs)
+    lb = fit_thresholds(params, inv)
+    eng = build_engine(params, lb.tau, inv, truncation_k=K, block_size=BLOCK)
+    queries = sample_queries(corpus, 32, seed=9)
+    exact = brute_force_answers(corpus, queries)
+    return corpus, inv, params, lb, eng, queries, exact
+
+
+def test_zero_false_negatives(setup):
+    _, inv, _, lb, _, _, _ = setup
+    assert false_negative_rate(lb, inv) == 0.0
+
+
+def test_fpr_below_one(setup):
+    _, inv, _, lb, _, _, _ = setup
+    assert 0.0 <= false_positive_rate(lb, inv, sample=2000) < 1.0
+
+
+def test_term_doc_matches_pair_logits(setup):
+    corpus, _, params, _, _, _, _ = setup
+    terms = jnp.asarray([3, 77, 1200], dtype=jnp.int32)
+    full = term_doc_logits(params, terms)
+    for i, t in enumerate([3, 77, 1200]):
+        docs = jnp.arange(corpus.n_docs, dtype=jnp.int32)
+        pl = pair_logits(params, jnp.full((corpus.n_docs,), t, jnp.int32), docs)
+        np.testing.assert_allclose(np.asarray(full[i]), np.asarray(pl), rtol=1e-5, atol=1e-5)
+
+
+def test_exhaustive_is_superset(setup):
+    _, _, _, _, eng, queries, exact = setup
+    res = run_queries(eng, queries, "exhaustive")
+    for i, ans in enumerate(exact):
+        assert np.setdiff1d(ans, np.nonzero(res[i])[0]).size == 0
+
+
+def test_block_is_superset(setup):
+    _, _, _, _, eng, queries, exact = setup
+    res = run_queries(eng, queries, "block")
+    for i, ans in enumerate(exact):
+        assert np.setdiff1d(ans, np.nonzero(res[i])[0]).size == 0
+
+
+def test_block_no_larger_than_exhaustive(setup):
+    """Algorithm 3 only restricts the scan — it cannot add results."""
+    _, _, _, _, eng, queries, _ = setup
+    r_ex = run_queries(eng, queries, "exhaustive")
+    r_bl = run_queries(eng, queries, "block")
+    assert (r_bl <= r_ex).all()
+
+
+def test_two_tier_guaranteed_queries_complete(setup):
+    _, _, _, _, eng, queries, exact = setup
+    res = run_queries(eng, queries, "two_tier")
+    guar = np.asarray(two_tier_guaranteed(eng.dfs, jnp.asarray(queries), K, with_model=True))
+    assert guar.any()
+    for i, ans in enumerate(exact):
+        if guar[i]:
+            assert np.setdiff1d(ans, np.nonzero(res[i])[0]).size == 0
+
+
+def test_guarantee_model_dominates_no_model(setup):
+    _, _, _, _, eng, queries, _ = setup
+    w = np.asarray(two_tier_guaranteed(eng.dfs, jnp.asarray(queries), K, with_model=True))
+    wo = np.asarray(two_tier_guaranteed(eng.dfs, jnp.asarray(queries), K, with_model=False))
+    assert (w | ~wo).all()  # without-model guarantee implies with-model
+    assert w.sum() >= wo.sum()
+
+
+def test_membership_training_reduces_loss(setup):
+    corpus, inv, _, _, _, _, _ = setup
+    cfg = LearnedIndexConfig(embed_dim=16)
+    params, _ = init_membership(jax.random.key(1), cfg, corpus.n_terms, corpus.n_docs)
+    from repro.data.loader import membership_batches
+    from repro.common.config import OptimizerConfig
+    from repro.train import init_train_state, make_train_step
+
+    it = membership_batches(corpus, batch_size=512, seed=0)
+    step = jax.jit(make_train_step(lambda p, b: membership_loss(p, b),
+                                   OptimizerConfig(lr=0.05, warmup_steps=5, total_steps=300,
+                                                   weight_decay=0.0)))
+    st = init_train_state(params, OptimizerConfig(lr=0.05))
+    losses = []
+    for i, batch in zip(range(60), it):
+        params, st, m = step(params, st, {k: jnp.asarray(v) for k, v in batch.items()})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:10])
+
+
+def test_gain_estimator_decreases_with_k(setup):
+    _, inv, _, _, _, _, _ = setup
+    curve = gain_curve(inv, [4, 16, 64], s_worst_bits=0.0)
+    # smaller k replaces more terms
+    assert curve[0].n_replaced >= curve[1].n_replaced >= curve[2].n_replaced
+    for g in curve:
+        assert g.gain_upper_bits >= g.gain_lower_bits
+
+
+def test_gain_upper_bound_positive_at_reasonable_k(setup):
+    _, inv, _, _, _, _, _ = setup
+    g = estimate_gain(inv, 16)
+    assert g.gain_upper_bits > 0  # replacing heavy terms must save space
+
+
+def test_storage_fraction_skew(setup):
+    """Paper Fig 1: few terms occupy a large storage share."""
+    _, inv, _, _, _, _, _ = setup
+    cum, counts = storage_fraction_curve(inv)
+    n_terms_40pct = counts[np.searchsorted(cum, 0.4)]
+    # tiny CI corpus is less skewed than Robust/GOV2/ClueWeb; the paper-scale
+    # "<1% of terms -> 40% of storage" claim is validated in benchmarks/fig1
+    assert n_terms_40pct < 0.15 * (inv.dfs > 0).sum()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_membership_deterministic(seed):
+    cfg = LearnedIndexConfig(embed_dim=8)
+    p1, _ = init_membership(jax.random.key(seed), cfg, 50, 40)
+    p2, _ = init_membership(jax.random.key(seed), cfg, 50, 40)
+    t = jnp.asarray([0, 1], jnp.int32)
+    d = jnp.asarray([5, 7], jnp.int32)
+    assert np.array_equal(np.asarray(pair_logits(p1, t, d)), np.asarray(pair_logits(p2, t, d)))

@@ -1,0 +1,122 @@
+"""Distributed pieces need >1 device; jax locks device count at first init,
+so these run in subprocesses with XLA_FLAGS set (the same isolation dryrun.py
+uses). Each subprocess asserts internally; the test checks the exit code."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, n_dev: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+
+
+def test_compressed_allreduce_subprocess():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.distributed import compressed_allreduce
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+xs = rng.standard_normal((8, 64)).astype(np.float32)
+f = lambda x: compressed_allreduce({"g": x}, mesh, "data")["g"]
+out = np.asarray(jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data")))(jnp.asarray(xs)))
+exact = xs.sum(0)
+for r in range(8):
+    assert np.array_equal(out[r], out[0]), "bitwise consistency"
+rel = np.abs(out[0] - exact).max() / np.abs(exact).max()
+assert rel < 5e-2, rel
+""")
+
+
+def test_collective_matmul_subprocess():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.distributed import collective_matmul_ag, matmul_reduce_scatter
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+x = rng.standard_normal((16, 64)).astype(np.float32)
+w = rng.standard_normal((64, 32)).astype(np.float32)
+cm = jax.jit(jax.shard_map(lambda a, b: collective_matmul_ag(a, b, "data"), mesh=mesh,
+    in_specs=(P(None, "data"), P(None, "data")), out_specs=P(None, "data")))
+assert np.allclose(np.asarray(cm(jnp.asarray(x), jnp.asarray(w))), x @ w, atol=1e-4)
+rs = jax.jit(jax.shard_map(lambda a, b: matmul_reduce_scatter(a, b, "data"), mesh=mesh,
+    in_specs=(P(None, "data"), P("data", None)), out_specs=P(None, "data")))
+assert np.allclose(np.asarray(rs(jnp.asarray(x), jnp.asarray(w))), x @ w, atol=1e-4)
+""")
+
+
+def test_pipeline_subprocess():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed import make_pipeline_fn
+mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+S, M, mb, dim = 4, 8, 4, 16
+Ws = (rng.standard_normal((S, dim, dim)).astype(np.float32) * 0.3)
+pf = jax.jit(make_pipeline_fn(lambda wp, x: jnp.tanh(x @ wp), mesh, S))
+xin = rng.standard_normal((M, mb, dim)).astype(np.float32)
+out = np.asarray(pf(jnp.asarray(Ws), jnp.asarray(xin)))
+ref = xin
+for s in range(S):
+    ref = np.tanh(ref @ Ws[s])
+assert np.allclose(out, ref, atol=1e-5)
+""", n_dev=4)
+
+
+def test_sharded_train_step_subprocess():
+    """A reduced LM train step lowered on an 8-device (2,4) mesh with the
+    production sharding rules — the mini version of the multi-pod dry-run."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_arch, reduce_config
+from repro.launch.steps import build_cell
+from repro.launch.dryrun import shardings_for, _opt_axes_like
+from repro.train import init_train_state
+from repro.common.config import ShapeSpec
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg, _, _ = get_arch("gemma2-2b")
+rc = reduce_config(cfg).replace(d_model=64, n_heads=4, head_dim=16)
+cell = build_cell(rc, ShapeSpec(name="t", kind="train", seq_len=32, global_batch=8))
+param_sh = shardings_for(cell.param_axes, cell.param_specs, mesh)
+input_sh = shardings_for(cell.input_axes, cell.input_specs, mesh)
+with jax.set_mesh(mesh):
+    params = cell.init_fn(jax.random.key(0))
+    params = jax.tree.map(jax.device_put, params, param_sh)
+    opt = init_train_state(params, cell.opt_cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 251, (8, 32)).astype(np.int32)),
+             "labels": jnp.asarray(rng.integers(0, 251, (8, 32)).astype(np.int32))}
+    step = jax.jit(cell.step)
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    # and the same step on 1 logical device must agree numerically
+""", n_dev=8)
+
+
+def test_checkpoint_elastic_reshard_subprocess():
+    """Save under one sharding, restore under a different mesh layout."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+mesh1 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+x = jnp.arange(64.0).reshape(8, 8)
+xs = jax.device_put(x, NamedSharding(mesh1, P("data", None)))
+with tempfile.TemporaryDirectory() as d:
+    save_checkpoint(d, 1, {"x": xs})
+    out = restore_checkpoint(d, 1, {"x": x},
+                             shardings={"x": NamedSharding(mesh2, P("model", "data"))})
+    assert np.array_equal(np.asarray(out["x"]), np.asarray(x))
+    assert out["x"].sharding.spec == P("model", "data")
+""", n_dev=8)

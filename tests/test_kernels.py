@@ -1,0 +1,120 @@
+"""Per-kernel validation: Pallas interpret-mode vs pure-jnp ref oracles,
+shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.index.compress import dgaps, optpfd_encode, pack_bits
+from repro.kernels.bitset.kernel import W_BLK, bitset_and_popcount
+from repro.kernels.bitset.ops import query_block_intersect
+from repro.kernels.bitset.ref import bitset_and_ref, popcount_ref
+from repro.kernels.membership.kernel import D_BLK, Q_BLK, membership_bitmask
+from repro.kernels.membership.ops import score_terms_bitmask
+from repro.kernels.membership.ref import membership_bitmask_ref, pack_bool_u32
+from repro.kernels.pfor.kernel import unpack_blocks
+from repro.kernels.pfor.ops import decode_stream
+from repro.kernels.pfor.ref import BLOCK, unpack_block_ref, words_per_block
+
+rng = np.random.default_rng(42)
+
+
+# ----------------------------------------------------------- membership
+@pytest.mark.parametrize("q_tiles,d_tiles", [(1, 1), (2, 1), (1, 2), (3, 2)])
+@pytest.mark.parametrize("e", [32, 64, 128])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_membership_kernel_vs_ref(q_tiles, d_tiles, e, dtype):
+    q = (rng.standard_normal((Q_BLK * q_tiles, e)) * 0.5).astype(np.float32)
+    d = (rng.standard_normal((D_BLK * d_tiles, e)) * 0.5).astype(np.float32)
+    tau = rng.standard_normal(Q_BLK * q_tiles).astype(np.float32)
+    bias = np.float32(0.05)
+    qj = jnp.asarray(q, dtype=dtype)
+    dj = jnp.asarray(d, dtype=dtype)
+    out = membership_bitmask(qj, dj, jnp.asarray(tau), jnp.asarray(bias))
+    ref = membership_bitmask_ref(qj, dj, jnp.asarray(tau), jnp.asarray(bias))
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_membership_ops_ragged():
+    params = {
+        "term_embed": {"table": jnp.asarray(rng.standard_normal((300, 48)).astype(np.float32))},
+        "doc_embed": {"table": jnp.asarray(rng.standard_normal((1111, 48)).astype(np.float32))},
+        "bias": jnp.float32(0.0),
+    }
+    tau = jnp.asarray(rng.standard_normal(300).astype(np.float32))
+    terms = jnp.asarray(rng.integers(0, 300, 45).astype(np.int32))
+    bm = np.asarray(score_terms_bitmask(params, terms, tau))
+    logits = np.asarray(params["term_embed"]["table"])[np.asarray(terms)] @ np.asarray(
+        params["doc_embed"]["table"]
+    ).T
+    hits = logits >= np.asarray(tau)[np.asarray(terms)][:, None]
+    for i in range(45):
+        for j in rng.integers(0, 1111, 40):
+            bit = bool((bm[i, j // 32] >> np.uint32(j % 32)) & 1)
+            assert bit == hits[i, j], (i, j)
+    # padded tail bits must be zero
+    tail_bits = 1111 % 32
+    assert (bm[:, -1] >> np.uint32(tail_bits)).max() == 0
+
+
+def test_pack_bool_u32_roundtrip():
+    bits = rng.integers(0, 2, size=(7, 96)).astype(bool)
+    packed = np.asarray(pack_bool_u32(jnp.asarray(bits)))
+    unpacked = np.unpackbits(packed.view(np.uint8), axis=-1, bitorder="little")[:, :96]
+    assert np.array_equal(unpacked.astype(bool), bits)
+
+
+# ----------------------------------------------------------- bitset
+@pytest.mark.parametrize("t", [1, 3, 8])
+def test_bitset_kernel_vs_ref(t):
+    q, w = 4, W_BLK * 2
+    maps = rng.integers(0, 2**32, size=(q, t, w), dtype=np.uint32)
+    valid = rng.integers(0, 2, size=(q, t)).astype(bool)
+    valid[:, 0] = True
+    anded, cnt = bitset_and_popcount(jnp.asarray(maps), jnp.asarray(valid.astype(np.int32)))
+    for i in range(q):
+        ref = np.asarray(bitset_and_ref(jnp.asarray(maps[i]), jnp.asarray(valid[i])))
+        assert np.array_equal(np.asarray(anded[i]), ref)
+        assert int(cnt[i]) == int(popcount_ref(jnp.asarray(ref)))
+
+
+def test_query_block_intersect_matches_numpy():
+    bitmaps = rng.integers(0, 2**32, size=(40, 70), dtype=np.uint32)
+    queries = np.array([[1, 5, -1, -1], [7, -1, -1, -1], [2, 3, 11, 39]], np.int32)
+    anded, cnt = query_block_intersect(jnp.asarray(bitmaps), jnp.asarray(queries))
+    for i, qr in enumerate(queries):
+        rows = [bitmaps[t] for t in qr if t >= 0]
+        exp = rows[0].copy()
+        for r in rows[1:]:
+            exp &= r
+        assert np.array_equal(np.asarray(anded[i]), exp)
+        assert int(cnt[i]) == sum(bin(int(x)).count("1") for x in exp)
+
+
+# ----------------------------------------------------------- pfor
+@pytest.mark.parametrize("width", [0, 1, 4, 7, 8, 13, 16, 20, 27, 31, 32])
+def test_pfor_kernel_vs_ref_all_widths(width):
+    n_blocks = 5
+    hi = 2**width if width < 32 else 2**32
+    vals = rng.integers(0, max(hi, 1), size=(n_blocks, BLOCK), dtype=np.uint64).astype(np.uint32)
+    if width == 0:
+        vals[:] = 0
+    wpb = words_per_block(width)
+    rows = np.zeros((n_blocks, wpb), np.uint32)
+    for i in range(n_blocks):
+        p = pack_bits(vals[i], width)
+        rows[i, : len(p)] = p
+    got = np.asarray(unpack_blocks(jnp.asarray(rows), width=width))
+    ref = np.asarray(unpack_block_ref(jnp.asarray(rows), width))
+    assert np.array_equal(got, vals)
+    assert np.array_equal(ref, vals)
+
+
+@given(st.lists(st.integers(0, 2**26), min_size=2, max_size=600, unique=True))
+@settings(max_examples=20, deadline=None)
+def test_pfor_stream_decode_property(ids):
+    docs = np.sort(np.array(ids, dtype=np.int32))
+    stream = optpfd_encode(dgaps(docs))
+    out = decode_stream(stream, len(docs))
+    assert np.array_equal(out, docs)

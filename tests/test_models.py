@@ -1,0 +1,217 @@
+"""Per-architecture smoke tests (reduced configs, one step, shape+finite
+asserts) + model-level invariants (decode==forward, MoE combine weights,
+EmbeddingBag vs manual, neighbor sampler)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import ShapeSpec
+from repro.configs import ARCH_IDS, get_arch, reduce_config
+from repro.launch.steps import build_cell, gnn_graph_dims, skeleton
+from repro.models import recsys as rec_mod
+from repro.models import sampler as sampler_mod
+from repro.models import transformer as tf_mod
+from repro.train import init_train_state
+
+rng = np.random.default_rng(11)
+
+SMALL = {
+    "train": ShapeSpec(name="train_4k", kind="train", seq_len=32, global_batch=4),
+    "prefill": ShapeSpec(name="prefill_32k", kind="prefill", seq_len=32, global_batch=2),
+    "decode": ShapeSpec(name="decode_32k", kind="decode", seq_len=64, global_batch=2),
+    "gnn": ShapeSpec(name="full_graph_sm", kind="train", n_nodes=60, n_edges=240, d_feat=16),
+    "rec_train": ShapeSpec(name="train_batch", kind="train", global_batch=16),
+    "rec_serve": ShapeSpec(name="serve_p99", kind="serve", global_batch=8),
+    "rec_ret": ShapeSpec(name="retrieval_cand", kind="retrieval", global_batch=1, n_candidates=300),
+}
+
+
+def _concrete(spec, masks_binary=True):
+    def mk(path, s):
+        name = "/".join(str(getattr(p, "key", "")) for p in path)
+        if s.dtype == jnp.int32:
+            return jnp.asarray(rng.integers(0, 3, size=s.shape).astype(np.int32))
+        if masks_binary and "mask" in name:
+            return jnp.ones(s.shape, s.dtype)
+        if "label" in name:
+            return jnp.asarray(rng.integers(0, 2, size=s.shape)).astype(s.dtype)
+        return jnp.asarray(rng.standard_normal(s.shape), dtype=s.dtype)
+
+    return jax.tree_util.tree_map_with_path(mk, spec)
+
+
+def _cases_for(family):
+    if family == "lm":
+        return ["train", "prefill", "decode"]
+    if family == "gnn":
+        return ["gnn"]
+    return ["rec_train", "rec_serve", "rec_ret"]
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke(arch_id):
+    cfg, shapes, skips = get_arch(arch_id)
+    rc = reduce_config(cfg)
+    for case in _cases_for(rc.family):
+        sh = SMALL[case]
+        cell = build_cell(rc, sh)
+        params = cell.init_fn(jax.random.key(0))
+        # axes tree must mirror the param tree exactly (sharding correctness)
+        is_ax = lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+        assert jax.tree.structure(params) == jax.tree.structure(cell.param_axes, is_leaf=is_ax)
+        inputs = _concrete(cell.input_specs)
+        if cell.kind == "train":
+            opt = init_train_state(params, cell.opt_cfg)
+            p2, o2, m = jax.jit(cell.step)(params, opt, inputs)
+            assert np.isfinite(float(m["loss"]))
+        elif cell.kind == "decode":
+            lg, _ = jax.jit(cell.step)(params, inputs["token"], inputs["pos"], inputs["caches"])
+            assert lg.shape == (sh.global_batch, rc.vocab_size)
+            assert np.isfinite(np.asarray(lg)).all()
+        elif cell.kind == "prefill":
+            lg, caches = jax.jit(cell.step)(params, inputs["tokens"])
+            assert lg.shape == (sh.global_batch, rc.vocab_size)
+            assert np.isfinite(np.asarray(lg)).all()
+        else:
+            out = jax.tree.leaves(jax.jit(cell.step)(params, inputs))
+            assert all(np.isfinite(np.asarray(a)).all() for a in out)
+
+
+@pytest.mark.parametrize("arch_id", ["gemma2-2b", "deepseek-v2-lite-16b"])
+def test_lm_decode_matches_full_forward(arch_id):
+    """Prefill + decode against the cache == full forward (exactness of the
+    serving path, incl. local-window ring cache and MLA latent cache)."""
+    cfg, _, _ = get_arch(arch_id)
+    rc = reduce_config(cfg)
+    params = tf_mod.init_lm(jax.random.key(0), rc)[0]
+    toks = jnp.asarray(rng.integers(0, rc.vocab_size, (2, 20)).astype(np.int32))
+    caches = tf_mod.init_cache(rc, 2, 32, jnp.float32)
+    lg_pre, caches = tf_mod.lm_prefill(params, rc, toks, caches, jnp.float32)
+    full = tf_mod.lm_logits(params, rc, toks, jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(full[:, -1]), atol=2e-4)
+    nxt = jnp.asarray(rng.integers(0, rc.vocab_size, (2, 3)).astype(np.int32))
+    seq = toks
+    for i in range(3):
+        pos = jnp.full((2, 1), 20 + i, jnp.int32)
+        lg_dec, caches = tf_mod.lm_decode_step(params, rc, nxt[:, i : i + 1], pos, caches, jnp.float32)
+        seq = jnp.concatenate([seq, nxt[:, i : i + 1]], axis=1)
+        full = tf_mod.lm_logits(params, rc, seq, jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(full[:, -1]), atol=2e-4)
+
+
+def test_moe_combine_weights_sum_to_one():
+    from repro.models import moe as moe_mod
+
+    cfg, _, _ = get_arch("deepseek-v2-lite-16b")
+    rc = reduce_config(cfg)
+    p, _ = moe_mod.init_moe(jax.random.key(0), rc)
+    x = jnp.asarray(rng.standard_normal((2, 8, rc.d_model)).astype(np.float32))
+    y = moe_mod.moe_ffn(p, rc, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_matches_dense_reference():
+    """With capacity ≥ all tokens, grouped dispatch must equal the dense
+    per-token expert sum (oracle)."""
+    from repro.common.config import ArchConfig
+    from repro.models import moe as moe_mod
+
+    cfg = ArchConfig(name="moe-test", d_model=16, n_routed_experts=4, top_k=2,
+                     moe_d_ff=8, use_moe=True, moe_aux_free=False, n_shared_experts=0,
+                     moe_capacity_factor=1e9)  # dropless: oracle has no drops
+    p, _ = moe_mod.init_moe(jax.random.key(1), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 6, 16)).astype(np.float32))
+    y = moe_mod.moe_ffn(p, cfg, x)
+
+    # dense oracle
+    logits = np.einsum("bsd,de->bse", np.asarray(x), np.asarray(p["router"]))
+    gate = jax.nn.softmax(jnp.asarray(logits), -1)
+    top_w, top_i = jax.lax.top_k(gate, 2)
+    top_w = np.asarray(top_w / top_w.sum(-1, keepdims=True))
+    top_i = np.asarray(top_i)
+    ref = np.zeros_like(np.asarray(x))
+    for b in range(2):
+        for s in range(6):
+            for k in range(2):
+                e = top_i[b, s, k]
+                h = np.asarray(x)[b, s] @ np.asarray(p["w_gate"])[e]
+                u = np.asarray(x)[b, s] @ np.asarray(p["w_up"])[e]
+                act = np.asarray(jax.nn.silu(jnp.asarray(h))) * u
+                ref[b, s] += top_w[b, s, k] * (act @ np.asarray(p["w_down"])[e])
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-5)
+
+
+def test_embedding_bag_matches_manual():
+    table = jnp.asarray(rng.standard_normal((20, 6)).astype(np.float32))
+    idx = jnp.asarray(np.array([[1, 3, -1], [0, -1, -1]], np.int32))
+    out = rec_mod.embedding_bag(table, idx, mode="sum")
+    t = np.asarray(table)
+    np.testing.assert_allclose(np.asarray(out)[0], t[1] + t[3], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out)[1], t[0], rtol=1e-6)
+    mean = rec_mod.embedding_bag(table, idx, mode="mean")
+    np.testing.assert_allclose(np.asarray(mean)[0], (t[1] + t[3]) / 2, rtol=1e-6)
+
+
+def test_fm_retrieval_matches_forward():
+    """Factorized retrieval must equal brute-force forward with target swapped."""
+    cfg, _, _ = get_arch("fm")
+    rc = reduce_config(cfg)
+    params = rec_mod.init_fm(jax.random.key(2), rc)[0]
+    base = rng.integers(0, 5, size=(1, rc.n_sparse)).astype(np.int32)
+    cands = np.arange(6, dtype=np.int32)
+    fast = np.asarray(rec_mod.fm_retrieval(params, rc, {"sparse": jnp.asarray(base)}, jnp.asarray(cands)))
+    slow = []
+    for c in cands:
+        row = base.copy()
+        row[0, 0] = c
+        slow.append(float(rec_mod.fm_forward(params, rc, {"sparse": jnp.asarray(row)})[0]))
+    np.testing.assert_allclose(fast, np.array(slow), rtol=1e-4, atol=1e-5)
+
+
+def test_mind_retrieval_matches_forward():
+    cfg, _, _ = get_arch("mind")
+    rc = reduce_config(cfg)
+    params = rec_mod.init_mind(jax.random.key(3), rc)[0]
+    hist = rng.integers(0, 50, size=(1, rc.hist_len)).astype(np.int32)
+    cands = np.arange(8, dtype=np.int32)
+    fast = np.asarray(rec_mod.mind_retrieval(params, rc, {"hist": jnp.asarray(hist)}, jnp.asarray(cands)))
+    slow = np.asarray(rec_mod.mind_forward(
+        params, rc,
+        {"hist": jnp.asarray(np.repeat(hist, 8, 0)), "target": jnp.asarray(cands)},
+    ))
+    np.testing.assert_allclose(fast, slow, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- sampler
+def test_neighbor_sampler_budget_and_validity():
+    g = sampler_mod.CSRGraph.random(500, avg_degree=8, seed=3)
+    max_n, max_e = sampler_mod.subgraph_budget(16, (5, 3))
+    sub = sampler_mod.sample_subgraph(
+        g, np.arange(16), (5, 3), max_nodes=max_n, max_edges=max_e,
+        rng=np.random.default_rng(0),
+    )
+    n_valid = int(sub["node_mask"].sum())
+    e_valid = int(sub["edge_mask"].sum())
+    assert 16 <= n_valid <= max_n
+    assert e_valid <= max_e
+    # all edges reference in-subgraph local node ids
+    assert sub["senders"][:e_valid].max() < n_valid
+    assert sub["receivers"][:e_valid].max() < n_valid
+    # every sampled edge exists in the original graph
+    for s_, r_ in zip(sub["senders"][:10], sub["receivers"][:10]):
+        if sub["edge_mask"][0] == 0:
+            break
+        src_global = sub["node_ids"][s_]
+        dst_global = sub["node_ids"][r_]
+        assert src_global in g.neighbors(int(dst_global))
+
+
+@given(st.integers(2, 64), st.tuples(st.integers(1, 6), st.integers(1, 6)))
+@settings(max_examples=10, deadline=None)
+def test_subgraph_budget_formula(seeds, fanout):
+    n, e = sampler_mod.subgraph_budget(seeds, fanout)
+    assert n == seeds * (1 + fanout[0] + fanout[0] * fanout[1])
+    assert e == seeds * (fanout[0] + fanout[0] * fanout[1])

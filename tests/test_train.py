@@ -1,0 +1,121 @@
+"""Training substrate: optimizer, schedules, grad accumulation, int8 moments,
+checkpoint manager (atomic commit, gc, restore, reshard)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
+from repro.common.config import OptimizerConfig
+from repro.train import (
+    dequantize_blockwise,
+    init_train_state,
+    lr_schedule,
+    make_train_step,
+    quantize_blockwise,
+)
+
+rng = np.random.default_rng(7)
+
+
+@pytest.fixture
+def regression():
+    X = jnp.asarray(rng.standard_normal((128, 8)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((8,)).astype(np.float32))
+    return X, X @ w
+
+
+def _loss(p, b):
+    return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+
+def test_adam_converges(regression):
+    X, y = regression
+    cfg = OptimizerConfig(lr=0.05, warmup_steps=5, total_steps=200, weight_decay=0.0)
+    step = jax.jit(make_train_step(_loss, cfg))
+    params = {"w": jnp.zeros(8)}
+    st = init_train_state(params, cfg)
+    first = None
+    for _ in range(80):
+        params, st, m = step(params, st, {"x": X, "y": y})
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < 1e-2 * first
+
+
+def test_int8_moments_track_fp32(regression):
+    X, y = regression
+    base = OptimizerConfig(lr=0.05, warmup_steps=5, total_steps=200, weight_decay=0.0)
+    q8 = OptimizerConfig(lr=0.05, warmup_steps=5, total_steps=200, weight_decay=0.0,
+                         moment_dtype="int8")
+    outs = {}
+    for name, cfg in [("fp32", base), ("int8", q8)]:
+        step = jax.jit(make_train_step(_loss, cfg))
+        params = {"w": jnp.zeros(8)}
+        st = init_train_state(params, cfg)
+        for _ in range(60):
+            params, st, m = step(params, st, {"x": X, "y": y})
+        outs[name] = float(m["loss"])
+    assert outs["int8"] < 20 * max(outs["fp32"], 1e-4)
+
+
+def test_quantize_roundtrip_small_error():
+    x = jnp.asarray(rng.standard_normal((37, 53)).astype(np.float32))
+    q = quantize_blockwise(x)
+    assert q["q"].dtype == jnp.int8
+    back = dequantize_blockwise(q, x.shape)
+    rel = float(jnp.abs(back - x).max() / jnp.abs(x).max())
+    assert rel < 0.02
+
+
+def test_grad_accumulation_matches_full_batch(regression):
+    X, y = regression
+    cfg = OptimizerConfig(lr=0.05, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    s_full = jax.jit(make_train_step(_loss, cfg))
+    s_acc = jax.jit(make_train_step(_loss, cfg, n_microbatches=4))
+    p1, st1 = {"w": jnp.zeros(8)}, init_train_state({"w": jnp.zeros(8)}, cfg)
+    p2, st2 = {"w": jnp.zeros(8)}, init_train_state({"w": jnp.zeros(8)}, cfg)
+    p1, _, _ = s_full(p1, st1, {"x": X, "y": y})
+    p2, _, _ = s_acc(p2, st2, {"x": X, "y": y})
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=2e-4, atol=2e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_schedule(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr_schedule(cfg, jnp.asarray(100))) < 0.15
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 3, tree)
+    assert latest_step(str(tmp_path)) == 3
+    out = restore_checkpoint(str(tmp_path), 3, tree)
+    assert np.array_equal(np.asarray(out["a"]), np.arange(6).reshape(2, 3))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_manager_gc_and_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"w": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree)
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000003", "step_00000004"]
+    step, out = cm.restore_latest(tree)
+    assert step == 4
+
+
+def test_checkpoint_restores_structure_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, {"w": jnp.zeros(3), "extra": jnp.zeros(1)})
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(7, {"w": jnp.zeros(2)})
+    for name in os.listdir(tmp_path):
+        assert not name.startswith("tmp.")
