@@ -12,7 +12,11 @@ import numpy as np
 from repro.common.config import CorpusConfig
 from repro.data.corpus import synthesize_corpus
 from repro.index.build import build_inverted_index
-from repro.index.compress import CODECS, compressed_size_bits, index_size_bits
+from repro.index.compress import compressed_size_bits, index_size_bits
+
+# classical codecs only here — the learned codecs (plm/rmi/hybrid) get their
+# own benchmarks/learned_postings.py section with the per-ε sweep
+_CLASSICAL = ("optpfd", "varbyte", "eliasfano", "bitvector")
 
 
 def codec_rows():
@@ -20,7 +24,7 @@ def codec_rows():
     inv = build_inverted_index(corpus)
     raw_bits = inv.n_postings * 32
     rows = []
-    for codec in CODECS:
+    for codec in _CLASSICAL:
         t0 = time.time()
         sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec)
         dt = (time.time() - t0) * 1e6
@@ -62,4 +66,17 @@ def kernel_rows():
     words = jnp.asarray(rng.integers(0, 2**32, size=(64, words_per_block(width)), dtype=np.uint32))
     us = _time(lambda: unpack_blocks(words, width=width))
     rows.append((f"kernel/pfor_unpack_w{width}", us, f"{64*128} ints/call"))
+
+    from repro.kernels.plm_decode.kernel import decode_batch
+    from repro.kernels.plm_decode.ref import SENTINEL
+
+    B, S, R = 16, 8, 512
+    starts = np.full((B, S), int(SENTINEL), np.int32)
+    starts[:, :4] = np.arange(4, dtype=np.int32) * (R // 4)
+    bases = rng.integers(0, 2**20, size=(B, S)).astype(np.int32)
+    slopes = rng.standard_normal((B, S)).astype(np.float32) * 50
+    corr = rng.integers(-32, 32, size=(B, R)).astype(np.int32)
+    args = tuple(jnp.asarray(a) for a in (starts, bases, slopes, corr))
+    us = _time(lambda: decode_batch(*args))
+    rows.append((f"kernel/plm_decode_{B}x{R}", us, f"{B*R} learned-codec ids/call"))
     return rows

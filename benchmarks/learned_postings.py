@@ -1,0 +1,81 @@
+"""Learned-vs-classical postings compression on a Zipf-distributed corpus.
+
+Emits the bits-per-posting comparison the paper's Eq. (2) analysis needs —
+plm/rmi/hybrid against OptPFD/varbyte/Elias-Fano — as benchmark CSV rows and
+as a ``BENCH_learned_postings.json`` trajectory file (one entry per codec +
+the per-ε learned-storage sweep), so successive PRs can track the compression
+frontier.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.common.config import CorpusConfig
+from repro.core.gain import learned_storage_fractions
+from repro.data.corpus import synthesize_corpus
+from repro.index.build import build_inverted_index
+from repro.index.compress import compressed_size_bits, index_size_bits
+
+BENCH_PATH = "BENCH_learned_postings.json"
+_CODECS = ("optpfd", "varbyte", "eliasfano", "plm", "rmi", "hybrid")
+
+
+def _corpus():
+    # Zipf-Mandelbrot synthetic collection (same generator the paper-fig
+    # benchmarks use) — big enough for long smooth lists where models win.
+    return synthesize_corpus(
+        CorpusConfig(n_docs=4000, n_terms=30000, avg_doc_len=120, seed=7)
+    )
+
+
+def learned_rows(write_json: bool = True):
+    inv = build_inverted_index(_corpus())
+    rows, traj = [], {"n_docs": inv.n_docs, "n_postings": inv.n_postings, "codecs": {}}
+    for codec in _CODECS:
+        t0 = time.time()
+        sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec)
+        dt = (time.time() - t0) * 1e6
+        bpp = float(sizes.sum() / inv.n_postings)
+        traj["codecs"][codec] = {"bits_per_posting": bpp, "total_bits": int(sizes.sum())}
+        rows.append((f"learned/{codec}", dt, f"bits_per_posting={bpp:.3f}"))
+    traj["eps_sweep"] = [
+        {
+            "eps": r.eps,
+            "frac_terms_learned": r.frac_terms_learned,
+            "frac_bits_saved": r.frac_bits_saved,
+            "hybrid_bits": r.hybrid_bits,
+        }
+        for r in learned_storage_fractions(inv, (7, 15, 63, 255))
+    ]
+    # clustered-ids regime: real collections assign nearby ids to related
+    # docs (crawl order, URL sort), which is where rank models win — the
+    # uniform synthetic corpus above has no learnable structure beyond density
+    rng = np.random.default_rng(3)
+    cl_rows = []
+    for t in range(200):
+        n_runs = int(rng.integers(2, 8))
+        runs = []
+        pos = 0
+        for _ in range(n_runs):
+            pos += int(rng.integers(1000, 200_000))
+            ln = int(rng.integers(200, 2000))
+            runs.append(np.arange(pos, pos + ln * 2, 2))
+            pos += ln * 2
+        cl_rows.append(np.concatenate(runs).astype(np.int32))
+    uni = int(max(r[-1] for r in cl_rows)) + 1
+    for codec in ("optpfd", "plm", "hybrid"):
+        t0 = time.time()
+        bits = sum(int(compressed_size_bits(r, uni, codec)) for r in cl_rows)
+        dt = (time.time() - t0) * 1e6
+        n_post = sum(len(r) for r in cl_rows)
+        bpp = bits / n_post
+        traj["codecs"][f"clustered/{codec}"] = {"bits_per_posting": bpp, "total_bits": bits}
+        rows.append((f"learned/clustered_{codec}", dt, f"bits_per_posting={bpp:.3f}"))
+    if write_json:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(traj, f, indent=2)
+        rows.append((f"learned/json", 0.0, f"wrote {BENCH_PATH}"))
+    return rows

@@ -5,16 +5,22 @@ Prints ``name,us_per_call,derived`` CSV.
   fig2/..   Eq.(2) gain bounds vs truncation k    (paper Fig 2 + Eq. 2)
   fig3/..   % guaranteed-correct queries          (paper Fig 3)
   codec/..  compression ratios (OptPFD vs others) (paper §4 setup)
+  learned/.. learned-vs-classical bits/posting    (+ BENCH_learned_postings.json)
   kernel/.. Pallas kernels, interpret-mode        (plumbing check)
   roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
 """
 import os
 import sys
 
+# allow `python benchmarks/run.py` from the repo root (script mode puts
+# benchmarks/ itself on sys.path, not its parent)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
     from benchmarks.paper_figs import _collections, fig1_rows, fig2_rows, fig3_rows
     from benchmarks.codec_kernels import codec_rows, kernel_rows
+    from benchmarks.learned_postings import learned_rows
     from benchmarks.roofline import rows_from_file
 
     print("name,us_per_call,derived")
@@ -24,6 +30,7 @@ def main() -> None:
     rows += fig2_rows(colls)
     rows += fig3_rows(colls)
     rows += codec_rows()
+    rows += learned_rows()
     rows += kernel_rows()
     for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
         if os.path.exists(path):

@@ -49,6 +49,12 @@ def main():
     ok = all(np.array_equal(r, e) for r, e in zip(results, exact))
     print(f"16 queries served, exact={ok}")
     print("memory report (bits):", eng.memory_report())
+
+    # 6. the §3.3 hybrid tier-2 store: per-term min-bits codec (learned or
+    # classical), decoded exactly during verification above
+    bpp = eng.tier2.size_bits() / inv.n_postings
+    print(f"tier-2 hybrid store: {bpp:.2f} bits/posting (raw 32.00), "
+          f"codec split {eng.tier2.codec_histogram()}")
     assert ok
 
 

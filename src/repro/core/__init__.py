@@ -29,7 +29,14 @@ from repro.core.algorithms import (
     two_tier_guaranteed,
     two_tier_query,
 )
-from repro.core.gain import GainReport, estimate_gain, gain_curve, storage_fraction_curve
+from repro.core.gain import (
+    GainReport,
+    LearnedStorageReport,
+    estimate_gain,
+    gain_curve,
+    learned_storage_fractions,
+    storage_fraction_curve,
+)
 
 __all__ = [
     "init_membership",
@@ -50,7 +57,9 @@ __all__ = [
     "two_tier_guaranteed",
     "two_tier_query",
     "GainReport",
+    "LearnedStorageReport",
     "estimate_gain",
     "gain_curve",
+    "learned_storage_fractions",
     "storage_fraction_curve",
 ]

@@ -7,6 +7,12 @@ with size.trunc.list(k) estimated as "the average size of compressed lists of
 the same length in the complete compressed inverted index" (paper §4), s the
 model bits per (doc + term) pair (upper bound s=0, lower bound s=512), and the
 final |T| the one replaced-or-not indicator bit per term.
+
+`codec` may be any entry of repro.index.compress.CODECS — including the
+learned rank-model codecs "plm"/"rmi" and the per-term "hybrid" selector —
+so the Eq. (2) bounds can be evaluated against a learned baseline index.
+`learned_storage_fractions` reports the learned-vs-classical split per
+correction budget ε (the storage-gain tradeoff the paper's §4 motivates).
 """
 from __future__ import annotations
 
@@ -55,12 +61,13 @@ def estimate_gain(
     k: int,
     *,
     codec: str = "optpfd",
+    eps: int | None = None,
     s_worst_bits: float = 512.0,
     sizes: np.ndarray | None = None,
 ) -> GainReport:
     dfs = inv.dfs
     if sizes is None:
-        sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec)
+        sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec, eps=eps)
     replaced = dfs > k  # R = terms whose lists get truncated
     trunc_bits = avg_size_for_length(sizes, dfs, k)
     saved = sizes[replaced].sum() - replaced.sum() * trunc_bits
@@ -78,13 +85,64 @@ def estimate_gain(
 
 
 def gain_curve(
-    inv: InvertedIndex, ks: list[int], *, codec: str = "optpfd", s_worst_bits: float = 512.0
+    inv: InvertedIndex,
+    ks: list[int],
+    *,
+    codec: str = "optpfd",
+    eps: int | None = None,
+    s_worst_bits: float = 512.0,
 ) -> list[GainReport]:
-    sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec)
+    sizes = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec, eps=eps)
     return [
         estimate_gain(inv, k, codec=codec, s_worst_bits=s_worst_bits, sizes=sizes)
         for k in ks
     ]
+
+
+@dataclass
+class LearnedStorageReport:
+    """Learned-vs-classical storage split at one correction budget ε."""
+
+    eps: int
+    classical_bits: int  # whole index under the classical codec
+    learned_bits: int  # whole index under the learned codec
+    hybrid_bits: int  # per-term min + 1 selector bit/term
+    frac_terms_learned: float  # fraction of nonempty terms where learned wins
+    frac_bits_saved: float  # 1 - hybrid/classical
+
+
+def learned_storage_fractions(
+    inv: InvertedIndex,
+    epsilons: tuple[int, ...] = (7, 15, 63, 255),
+    *,
+    codec: str = "optpfd",
+    learned: str = "plm",
+) -> list[LearnedStorageReport]:
+    """Per-ε storage split: where does the rank model beat the classical codec?
+
+    For each ε the learned codec stores ⌈log2(2ε+1)⌉-bit corrections, so
+    larger ε means fewer segments but wider corrections — this sweep is the
+    Eq. (2)-style tradeoff curve for replacing postings with models.  The
+    hybrid column charges 1 extra bit per term for the replaced-or-not flag
+    (the paper's |T| term).
+    """
+    classical = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, codec)
+    nz = inv.dfs > 0
+    out = []
+    for eps in epsilons:
+        lrn = index_size_bits(inv.term_offsets, inv.doc_ids, inv.n_docs, learned, eps=eps)
+        hybrid = int(np.minimum(lrn, classical)[nz].sum()) + int(nz.sum())
+        out.append(
+            LearnedStorageReport(
+                eps=eps,
+                classical_bits=int(classical.sum()),
+                learned_bits=int(lrn.sum()),
+                hybrid_bits=hybrid,
+                frac_terms_learned=float((lrn < classical)[nz].mean()) if nz.any() else 0.0,
+                frac_bits_saved=1.0 - hybrid / max(1, int(classical.sum())),
+            )
+        )
+    return out
 
 
 def storage_fraction_curve(inv: InvertedIndex, codec: str = "optpfd") -> tuple[np.ndarray, np.ndarray]:

@@ -27,7 +27,16 @@ def dgaps(doc_ids: np.ndarray) -> np.ndarray:
 
 
 def undgaps(gaps: np.ndarray) -> np.ndarray:
-    return np.cumsum(gaps.astype(np.int64)).astype(np.int32)
+    """Inverse d-gap transform, int64-safe.
+
+    The cumulative sum runs in int64 and is checked before narrowing: a doc id
+    past 2^31-1 (corrupt stream or gap overflow) raises instead of silently
+    wrapping to a negative int32.
+    """
+    ids = np.cumsum(gaps.astype(np.int64))
+    if ids.size and int(ids[-1]) > np.iinfo(np.int32).max:
+        raise OverflowError(f"doc id {int(ids[-1])} exceeds int32 range")
+    return ids.astype(np.int32)
 
 
 # --------------------------------------------------------------------------- varbyte
@@ -176,56 +185,203 @@ def optpfd_decode(words: np.ndarray, n: int) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------- Elias-Fano
+def _ef_split(n: int, universe: int) -> int:
+    """Low-bit width l for Elias-Fano: floor(log2(u/n)), 0 when the list is
+    dense (universe <= n, where the high-bit unary part alone is optimal)."""
+    if universe <= n:
+        return 0
+    return int(np.floor(np.log2(universe / n)))
+
+
 def eliasfano_size_bits(doc_ids: np.ndarray, universe: int) -> int:
     n = len(doc_ids)
     if n == 0:
         return 0
-    l = max(0, int(np.floor(np.log2(max(universe, 1) / n))) if universe > n else 0)
-    return n * l + 2 * n + universe // max(1, 2**l) + 2  # low bits + unary high bits
+    universe = max(universe, int(doc_ids[-1]) + 1)
+    l = _ef_split(n, universe)
+    # n low halves + unary high halves (n stop bits + universe>>l bucket bits)
+    return n * l + 2 * n + (universe >> l) + 2
+
+
+def eliasfano_encode(doc_ids: np.ndarray, universe: int) -> np.ndarray:
+    """Streamable Elias-Fano: [l | n_high_words<<8] + packed lows + unary highs."""
+    n = len(doc_ids)
+    if n == 0:
+        return np.zeros(0, np.uint32)
+    ids = np.asarray(doc_ids, np.int64)
+    universe = max(universe, int(ids[-1]) + 1)
+    l = _ef_split(n, universe)
+    low = (ids & ((1 << l) - 1)).astype(np.uint32)
+    high = (ids >> l).astype(np.int64)
+    hv_bits = n + (universe >> l) + 1
+    hv = np.zeros(hv_bits, np.uint8)
+    hv[high + np.arange(n, dtype=np.int64)] = 1
+    hv_words = np.packbits(hv, bitorder="little")
+    pad = (-len(hv_words)) % 4
+    if pad:
+        hv_words = np.concatenate([hv_words, np.zeros(pad, np.uint8)])
+    hv_words = hv_words.view(np.uint32)
+    header = np.array([l | (len(hv_words) << 8)], dtype=np.uint32)
+    return np.concatenate([header, pack_bits(low, l), hv_words])
+
+
+def eliasfano_decode(words: np.ndarray, n: int) -> np.ndarray:
+    if n == 0:
+        return np.zeros(0, np.int32)
+    h = int(words[0])
+    l, n_high_words = h & 0xFF, h >> 8
+    n_low_words = (n * l + 31) // 32
+    low = unpack_bits(words[1 : 1 + n_low_words], l, n).astype(np.int64)
+    hv = np.unpackbits(
+        words[1 + n_low_words : 1 + n_low_words + n_high_words].view(np.uint8),
+        bitorder="little",
+    )
+    ones = np.flatnonzero(hv)[:n]
+    high = ones - np.arange(n, dtype=np.int64)
+    return ((high << l) | low).astype(np.int32)
 
 
 def bitvector_size_bits(universe: int) -> int:
     return universe
 
 
+def bitvector_encode(doc_ids: np.ndarray, universe: int) -> np.ndarray:
+    n = len(doc_ids)
+    if n == 0:
+        return np.zeros(0, np.uint32)
+    ids = np.asarray(doc_ids, np.int64)
+    universe = max(universe, int(ids[-1]) + 1)
+    bits = np.zeros(universe, np.uint8)
+    bits[ids] = 1
+    by = np.packbits(bits, bitorder="little")
+    pad = (-len(by)) % 4
+    if pad:
+        by = np.concatenate([by, np.zeros(pad, np.uint8)])
+    return by.view(np.uint32).copy()
+
+
+def bitvector_decode(words: np.ndarray, n: int) -> np.ndarray:
+    if n == 0:
+        return np.zeros(0, np.int32)
+    bits = np.unpackbits(words.view(np.uint8), bitorder="little")
+    return np.flatnonzero(bits)[:n].astype(np.int32)
+
+
 # --------------------------------------------------------------------------- dispatch
-CODECS = ("optpfd", "varbyte", "eliasfano", "bitvector")
+# Every codec has a size model; every codec here also has an exact lossless
+# encoder/decoder pair.  "plm"/"rmi" are the learned rank-model codecs of
+# repro.postings (lazy-imported to keep this module numpy-only at import
+# time); "hybrid" is the per-term min-bits selector (repro.postings.hybrid).
+CODECS = ("optpfd", "varbyte", "eliasfano", "bitvector", "plm", "rmi")
 
 
-def compressed_size_bits(doc_ids: np.ndarray, universe: int, codec: str = "optpfd") -> int:
-    g = dgaps(np.asarray(doc_ids))
+def _default_universe(doc_ids: np.ndarray, universe: int | None) -> int:
+    if universe is not None:
+        return universe
+    return int(doc_ids[-1]) + 1 if len(doc_ids) else 0
+
+
+def compressed_size_bits(
+    doc_ids: np.ndarray,
+    universe: int,
+    codec: str = "optpfd",
+    *,
+    eps: int | None = None,
+) -> int:
+    """Exact compressed bits of one posting list under `codec`.
+
+    `eps` is the learned-codec error bound (plm correction budget); classical
+    codecs ignore it.  codec="hybrid" returns the per-term minimum over all
+    codecs plus the selector tag bits.
+    """
+    doc_ids = np.asarray(doc_ids)
     if codec == "optpfd":
-        return optpfd_size_bits(g)
+        return optpfd_size_bits(dgaps(doc_ids))
     if codec == "varbyte":
-        return varbyte_size_bits(g)
+        return varbyte_size_bits(dgaps(doc_ids))
     if codec == "eliasfano":
-        return eliasfano_size_bits(np.asarray(doc_ids), universe)
+        return eliasfano_size_bits(doc_ids, universe)
     if codec == "bitvector":
         return bitvector_size_bits(universe)
+    if codec == "plm":
+        from repro.postings.plm import DEFAULT_EPS, plm_size_bits
+
+        return plm_size_bits(doc_ids, DEFAULT_EPS if eps is None else eps)
+    if codec == "rmi":
+        from repro.postings.rmi import rmi_size_bits
+
+        return rmi_size_bits(doc_ids)
+    if codec == "hybrid":
+        from repro.postings.hybrid import hybrid_size_bits
+
+        return hybrid_size_bits(doc_ids, universe, eps=eps)
     raise ValueError(f"unknown codec {codec}")
 
 
-def encode_postings(doc_ids: np.ndarray, codec: str = "optpfd") -> np.ndarray:
-    g = dgaps(np.asarray(doc_ids))
+def encode_postings(
+    doc_ids: np.ndarray,
+    codec: str = "optpfd",
+    *,
+    universe: int | None = None,
+    eps: int | None = None,
+) -> np.ndarray:
+    """Encode a sorted doc-id list to a uint32 word stream under `codec`."""
+    doc_ids = np.asarray(doc_ids)
     if codec == "optpfd":
-        return optpfd_encode(g)
+        return optpfd_encode(dgaps(doc_ids))
     if codec == "varbyte":
-        return varbyte_encode(g)
-    raise ValueError(f"codec {codec} has size-model only (no bytestream encoder)")
+        return varbyte_encode(dgaps(doc_ids))
+    if codec == "eliasfano":
+        return eliasfano_encode(doc_ids, _default_universe(doc_ids, universe))
+    if codec == "bitvector":
+        return bitvector_encode(doc_ids, _default_universe(doc_ids, universe))
+    if codec == "plm":
+        from repro.postings.plm import DEFAULT_EPS, plm_encode
+
+        return plm_encode(doc_ids, DEFAULT_EPS if eps is None else eps)
+    if codec == "rmi":
+        from repro.postings.rmi import rmi_encode
+
+        return rmi_encode(doc_ids)
+    if codec == "hybrid":
+        from repro.postings.hybrid import hybrid_encode
+
+        return hybrid_encode(doc_ids, _default_universe(doc_ids, universe), eps=eps)
+    raise ValueError(f"unknown codec {codec}")
 
 
 def decode_postings(words: np.ndarray, n: int, codec: str = "optpfd") -> np.ndarray:
+    """Exact inverse of encode_postings -> sorted int32 doc ids."""
     if codec == "optpfd":
-        g = optpfd_decode(words, n)
-    elif codec == "varbyte":
-        g = varbyte_decode(words, n)
-    else:
-        raise ValueError(f"codec {codec} has size-model only (no bytestream decoder)")
-    return undgaps(g)
+        return undgaps(optpfd_decode(words, n))
+    if codec == "varbyte":
+        return undgaps(varbyte_decode(words, n))
+    if codec == "eliasfano":
+        return eliasfano_decode(words, n)
+    if codec == "bitvector":
+        return bitvector_decode(words, n)
+    if codec == "plm":
+        from repro.postings.plm import plm_decode
+
+        return plm_decode(words, n)
+    if codec == "rmi":
+        from repro.postings.rmi import rmi_decode
+
+        return rmi_decode(words, n)
+    if codec == "hybrid":
+        from repro.postings.hybrid import hybrid_decode
+
+        return hybrid_decode(words, n)
+    raise ValueError(f"unknown codec {codec}")
 
 
 def index_size_bits(
-    term_offsets: np.ndarray, doc_ids: np.ndarray, universe: int, codec: str = "optpfd"
+    term_offsets: np.ndarray,
+    doc_ids: np.ndarray,
+    universe: int,
+    codec: str = "optpfd",
+    *,
+    eps: int | None = None,
 ) -> np.ndarray:
     """Per-term compressed sizes for a whole index (vector over terms)."""
     n_terms = len(term_offsets) - 1
@@ -233,5 +389,5 @@ def index_size_bits(
     for t in range(n_terms):
         lo, hi = term_offsets[t], term_offsets[t + 1]
         if hi > lo:
-            sizes[t] = compressed_size_bits(doc_ids[lo:hi], universe, codec)
+            sizes[t] = compressed_size_bits(doc_ids[lo:hi], universe, codec, eps=eps)
     return sizes

@@ -1,9 +1,10 @@
 """Pallas TPU kernels for the perf-critical compute of the learned index.
 
-Three hot spots, per DESIGN.md §3:
+Four hot spots, per DESIGN.md §3:
   membership/  f(t, ·) scoring over doc tiles: MXU matmul + threshold + bit-pack
   bitset/      Algorithm-3 block-bitmap AND + popcount over packed u32 words
   pfor/        OptPFD fixed-width bit-unpack (tier-2 postings decode)
+  plm_decode/  learned-codec (plm/rmi) batched segment-eval + correction add
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper, CPU fallback via interpret=True), ref.py (pure-jnp oracle).

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for batched PLM/RMI segment evaluation + correction add.
+
+One batch row = one posting list, padded to S segments and R ranks.  Padding
+segments carry start = SENTINEL so they are never active; every real rank is
+covered by exactly one segment (starts are strictly increasing and start at
+0), so the one-hot select below is an exact gather.
+
+The single float32 multiply + banker's rint matches
+repro.postings.plm.eval_segments bit-for-bit (one rounding, so no FMA
+contraction ambiguity), which is what makes kernel-decoded ids identical to
+the host decode path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SENTINEL = jnp.iinfo(jnp.int32).max  # start value marking padding segments
+
+
+def decode_ref(
+    starts: jnp.ndarray,  # (B, S) int32, padded with SENTINEL
+    bases: jnp.ndarray,  # (B, S) int32 (integer intercept, exact)
+    slopes: jnp.ndarray,  # (B, S) float32
+    corr: jnp.ndarray,  # (B, R) int32 corrections
+) -> jnp.ndarray:
+    """-> (B, R) int32 decoded doc ids (padding ranks decode to corr value)."""
+    B, S = starts.shape
+    R = corr.shape[1]
+    ranks = jnp.arange(R, dtype=jnp.int32)
+    active = starts[:, None, :] <= ranks[None, :, None]  # (B, R, S)
+    nxt = jnp.concatenate(
+        [starts[:, 1:], jnp.full((B, 1), SENTINEL, jnp.int32)], axis=1
+    )
+    onehot = active & (nxt[:, None, :] > ranks[None, :, None])
+    ohf = onehot.astype(jnp.float32)
+    ohi = onehot.astype(jnp.int32)
+    sel_slope = (ohf * slopes[:, None, :]).sum(-1)  # exact: one nonzero term
+    sel_base = (ohi * bases[:, None, :]).sum(-1)
+    sel_start = (ohi * starts[:, None, :]).sum(-1)
+    di = (ranks[None, :] - sel_start).astype(jnp.float32)
+    frac = jnp.rint(sel_slope * di).astype(jnp.int32)
+    return sel_base + frac + corr

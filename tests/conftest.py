@@ -1,0 +1,83 @@
+"""Test bootstrap: provide a minimal `hypothesis` fallback when the real
+package is absent (the CI/container image may not ship it).
+
+The shim implements just the subset this suite uses — `given`, `settings`,
+and `strategies.{integers,lists,tuples}` — by drawing a deterministic batch
+of pseudo-random examples per test. It is NOT a replacement for hypothesis
+(no shrinking, no database); when the real package is installed it is used
+untouched.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw  # draw(rng) -> value
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _lists(elem, min_size=0, max_size=None, unique=False):
+        cap = 50 if max_size is None else max_size
+
+        def draw(rng):
+            n = int(rng.integers(min_size, cap + 1))
+            if not unique:
+                return [elem.draw(rng) for _ in range(n)]
+            vals, attempts = set(), 0
+            while len(vals) < n and attempts < 50 * (n + 1):
+                vals.add(elem.draw(rng))
+                attempts += 1
+            return list(vals)
+
+        return _Strategy(draw)
+
+    def _tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    def _settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_shim_max_examples", None) or getattr(
+                    wrapper, "_shim_max_examples", 20
+                )
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = _np.random.default_rng(seed)
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.lists = _lists
+    _st.tuples = _tuples
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__is_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,247 @@
+"""Learned-postings subsystem: codec round-trips, hybrid selection, kernel
+bit-exactness, and the serve-path regressions (empty lists, overflow)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gain import learned_storage_fractions
+from repro.index.build import build_inverted_index
+from repro.index.compress import (
+    CODECS,
+    compressed_size_bits,
+    decode_postings,
+    dgaps,
+    eliasfano_size_bits,
+    encode_postings,
+    undgaps,
+)
+from repro.postings import (
+    CANDIDATES,
+    HybridPostings,
+    choose_codec,
+    plm_decode,
+    plm_encode,
+    plm_size_bits,
+    rmi_encode,
+)
+from repro.postings.plm import parse_stream
+
+ALL_CODECS = list(CODECS) + ["hybrid"]
+
+
+def _random_list(rng, n, universe):
+    n = min(n, universe)
+    return np.sort(rng.choice(universe, size=n, replace=False)).astype(np.int32)
+
+
+# ------------------------------------------------------------- round-trips
+@pytest.mark.parametrize("codec", ALL_CODECS)
+@pytest.mark.parametrize("n", [0, 1, 2, 127, 128, 129, 300])
+def test_roundtrip_lengths(codec, n):
+    """Every codec is exactly lossless incl. empty, singleton, block edges."""
+    rng = np.random.default_rng(n + 17)
+    ids = _random_list(rng, n, 1 << 20)
+    enc = encode_postings(ids, codec, universe=1 << 20)
+    assert np.array_equal(decode_postings(enc, len(ids), codec), ids)
+
+
+@pytest.mark.parametrize("codec", ALL_CODECS)
+def test_roundtrip_adversarial_gaps(codec):
+    """Huge first gap + near-int32-max ids survive every codec."""
+    ids = np.array([0, 1, 2, 3, 2**31 - 5, 2**31 - 2], dtype=np.int64).astype(np.int32)
+    enc = encode_postings(ids, codec, universe=2**31 - 1)
+    assert np.array_equal(decode_postings(enc, len(ids), codec), ids)
+
+
+@given(st.lists(st.integers(0, 2**27), min_size=0, max_size=500, unique=True))
+@settings(max_examples=25, deadline=None)
+def test_learned_roundtrip_property(ids):
+    """Acceptance: plm and rmi are exactly lossless on randomized lists."""
+    docs = np.sort(np.array(ids, dtype=np.int64)).astype(np.int32)
+    for codec in ("plm", "rmi"):
+        enc = encode_postings(docs, codec)
+        assert np.array_equal(decode_postings(enc, len(docs), codec), docs), codec
+
+
+@pytest.mark.parametrize("eps", [0, 1, 7, 63, 1024])
+def test_plm_eps_sweep_lossless(eps):
+    rng = np.random.default_rng(eps)
+    ids = _random_list(rng, 400, 1 << 22)
+    assert np.array_equal(plm_decode(plm_encode(ids, eps), len(ids)), ids)
+
+
+def test_plm_crushes_smooth_lists():
+    """The paper's motivation: a near-linear list stores in O(segments) bits."""
+    ids = np.arange(0, 3 * 50_000, 3, dtype=np.int32)
+    plm_bits = plm_size_bits(ids)
+    opt_bits = compressed_size_bits(ids, int(ids[-1]) + 1, "optpfd")
+    assert plm_bits < opt_bits / 50
+
+
+def test_plm_size_model_matches_stream():
+    rng = np.random.default_rng(3)
+    ids = _random_list(rng, 700, 1 << 24)
+    bits = plm_size_bits(ids)
+    words = plm_encode(ids)
+    # stream pads corrections to a word boundary; size model counts exact bits
+    assert bits <= words.size * 32 <= bits + 31 + 1
+
+
+# ----------------------------------------------------------------- hybrid
+@given(st.lists(st.integers(0, 2**26), min_size=0, max_size=400, unique=True))
+@settings(max_examples=25, deadline=None)
+def test_hybrid_always_picks_min_bits(ids):
+    """Acceptance: hybrid never selects a codec larger than the best one."""
+    docs = np.sort(np.array(ids, dtype=np.int64)).astype(np.int32)
+    universe = 1 << 26
+    codec, bits, sizes = choose_codec(docs, universe)
+    assert bits == min(sizes.values())
+    assert sizes[codec] == bits
+
+
+def test_hybrid_store_roundtrip_and_accounting():
+    from repro.common.config import CorpusConfig
+    from repro.data.corpus import synthesize_corpus
+
+    inv = build_inverted_index(
+        synthesize_corpus(CorpusConfig(n_docs=400, n_terms=1500, avg_doc_len=40, seed=9))
+    )
+    store = HybridPostings.from_index(inv)
+    for t in range(0, inv.n_terms, 37):
+        assert np.array_equal(store.postings(t), inv.postings(t))
+    per_term = store.bits[inv.dfs > 0]
+    assert (per_term > 0).all()
+    assert store.size_bits() == int(store.bits.sum())
+    assert sum(store.codec_histogram().values()) == int((inv.dfs > 0).sum())
+
+
+def test_hybrid_stream_selfdescribing():
+    rng = np.random.default_rng(11)
+    ids = _random_list(rng, 250, 1 << 18)
+    enc = encode_postings(ids, "hybrid", universe=1 << 18)
+    assert int(enc[0]) < len(CANDIDATES)  # tag word
+    assert np.array_equal(decode_postings(enc, len(ids), "hybrid"), ids)
+
+
+# ------------------------------------------------------------------ kernel
+def test_plm_decode_kernel_matches_ref_bit_exact():
+    """Acceptance: Pallas kernel == jnp reference in CPU interpret mode."""
+    import jax.numpy as jnp
+
+    from repro.kernels.plm_decode.kernel import decode_batch
+    from repro.kernels.plm_decode.ref import SENTINEL, decode_ref
+
+    rng = np.random.default_rng(5)
+    lists = [
+        _random_list(rng, n, 1 << 24) for n in (1, 5, 127, 128, 129, 700, 2000)
+    ]
+    parsed = [parse_stream(plm_encode(ids), len(ids)) for ids in lists]
+    S = max(len(p[0]) for p in parsed)
+    R = 2048
+    B = len(parsed)
+    starts = np.full((B, S), int(SENTINEL), np.int32)
+    bases = np.zeros((B, S), np.int32)
+    slopes = np.zeros((B, S), np.float32)
+    corr = np.zeros((B, R), np.int32)
+    for r, (st_, ba, sl, co) in enumerate(parsed):
+        s = len(st_)
+        starts[r, :s] = st_.astype(np.int32)
+        bases[r, :s] = ba.astype(np.int32)
+        slopes[r, :s] = sl
+        corr[r, : len(co)] = co.astype(np.int32)
+    args = tuple(jnp.asarray(a) for a in (starts, bases, slopes, corr))
+    assert np.array_equal(np.asarray(decode_batch(*args)), np.asarray(decode_ref(*args)))
+
+
+@pytest.mark.parametrize("enc", [plm_encode, rmi_encode])
+def test_kernel_batched_decode_exact(enc):
+    from repro.kernels.plm_decode.ops import decode_lists
+
+    rng = np.random.default_rng(6)
+    lens = [0, 1, 64, 129, 1000]
+    lists = [_random_list(rng, n, 1 << 22) for n in lens]
+    out = decode_lists([enc(ids) for ids in lists], [len(i) for i in lists])
+    for ids, got in zip(lists, out):
+        assert np.array_equal(ids, got)
+
+
+# ------------------------------------------------------- satellite regressions
+def test_undgaps_overflow_raises():
+    gaps = np.array([2**31 - 1, 10], dtype=np.uint32)
+    with pytest.raises(OverflowError):
+        undgaps(gaps)
+
+
+def test_undgaps_near_int32_max_ok():
+    ids = np.array([5, 2**31 - 2], dtype=np.int64).astype(np.int32)
+    assert np.array_equal(undgaps(dgaps(ids)), ids)
+
+
+def test_eliasfano_size_dense_branch():
+    """universe <= n: l must be 0 and the size model stays sane/positive."""
+    ids = np.arange(100, dtype=np.int32)
+    bits = eliasfano_size_bits(ids, universe=100)
+    assert bits == 2 * 100 + 100 + 2  # l=0: unary high bits only
+    assert eliasfano_size_bits(ids, universe=50) >= bits  # clamped to max id + 1
+
+
+def test_verify_empty_postings_regression():
+    """BooleanEngine._verify must not index p[-1] when a term has no postings."""
+    from repro.index.build import InvertedIndex
+    from repro.serve.boolean import BooleanEngine, ServeConfig
+
+    inv = InvertedIndex(
+        n_docs=8,
+        n_terms=3,
+        term_offsets=np.array([0, 4, 4, 6], dtype=np.int64),  # term 1 is empty
+        doc_ids=np.array([0, 2, 4, 6, 1, 3], dtype=np.int32),
+    )
+    eng = BooleanEngine.__new__(BooleanEngine)  # skip model training
+    eng.cfg = ServeConfig(postings_store="raw")
+    eng.inv = inv
+    eng._tier2 = None
+    eng._decode_cache = {}
+    out = eng._verify(np.array([0, 1], dtype=np.int32), np.array([0, 2], dtype=np.int32))
+    assert len(out) == 0  # empty term list -> empty conjunction, no crash
+    out = eng._verify(np.array([0, 2], dtype=np.int32), np.arange(8, dtype=np.int32))
+    assert set(out.tolist()) == {0, 2, 4, 6} & {1, 3}
+
+
+def test_verify_through_hybrid_store():
+    from repro.index.build import InvertedIndex
+    from repro.serve.boolean import BooleanEngine, ServeConfig
+
+    rng = np.random.default_rng(13)
+    a = np.sort(rng.choice(500, 200, replace=False)).astype(np.int32)
+    b = np.sort(rng.choice(500, 150, replace=False)).astype(np.int32)
+    inv = InvertedIndex(
+        n_docs=500,
+        n_terms=2,
+        term_offsets=np.array([0, len(a), len(a) + len(b)], dtype=np.int64),
+        doc_ids=np.concatenate([a, b]),
+    )
+    eng = BooleanEngine.__new__(BooleanEngine)
+    eng.cfg = ServeConfig(postings_store="hybrid")
+    eng.inv = inv
+    eng._tier2 = None
+    eng._decode_cache = {}
+    got = eng._verify(np.array([0, 1], dtype=np.int32), np.arange(500, dtype=np.int32))
+    expect = np.intersect1d(a, b)
+    assert np.array_equal(np.sort(got), expect)
+    assert eng.tier2 is not None and eng.tier2.size_bits() > 0
+
+
+# ------------------------------------------------------------------- gain
+def test_learned_storage_fractions_sane():
+    from repro.common.config import CorpusConfig
+    from repro.data.corpus import synthesize_corpus
+
+    inv = build_inverted_index(
+        synthesize_corpus(CorpusConfig(n_docs=500, n_terms=2000, avg_doc_len=50, seed=21))
+    )
+    reports = learned_storage_fractions(inv, (7, 63))
+    for r in reports:
+        assert 0.0 <= r.frac_terms_learned <= 1.0
+        # hybrid = per-term min + flags: never (meaningfully) above classical
+        assert r.hybrid_bits <= r.classical_bits + inv.n_terms
+        assert r.learned_bits > 0 and r.classical_bits > 0
