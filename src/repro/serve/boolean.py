@@ -4,7 +4,10 @@ Pipeline per batch of queries (pad-to-bucket batching):
   1. algorithm from LearnedIndexConfig: exhaustive | two_tier | block;
   2. learned-Bloom scoring (zero false negatives) produces candidate masks;
   3. optional `verified` mode re-checks candidates against the exact tier-2
-     postings (the paper's fallback structure) -> exact conjunctive results;
+     postings (the paper's fallback structure) -> exact conjunctive results.
+     Tier-2 is served from the hybrid learned/classical compressed store
+     (repro.postings.HybridPostings, built lazily on first verification) so
+     the fallback pays min-bits storage, not raw int32 arrays;
   4. results returned as packed bitmaps (32x cheaper to move than id lists)
      plus materialized doc ids per query.
 
@@ -33,6 +36,7 @@ class ServeConfig:
     verified: bool = True
     use_kernel: bool = False
     max_query_terms: int = 8
+    postings_store: str = "hybrid"  # tier-2 backing: "hybrid" (compressed) | "raw"
 
 
 class BooleanEngine:
@@ -46,10 +50,35 @@ class BooleanEngine:
         self.cfg = cfg or ServeConfig()
         self.inv = inv
         self.lb = lb
+        self._tier2 = None  # lazy HybridPostings (built on first verification)
+        self._decode_cache: dict[int, np.ndarray] = {}  # FIFO, _CACHE_TERMS max
         self.state = alg.build_engine(
             lb.params, lb.tau, inv,
             truncation_k=li_cfg.truncation_k, block_size=li_cfg.block_size,
         )
+
+    @property
+    def tier2(self):
+        """Compressed tier-2 postings store (hybrid per-term codec choice)."""
+        if self._tier2 is None and self.cfg.postings_store == "hybrid":
+            from repro.postings import HybridPostings
+
+            self._tier2 = HybridPostings.from_index(self.inv)
+        return self._tier2
+
+    _CACHE_TERMS = 1024  # hot-term decoded lists kept resident
+
+    def _postings(self, t: int) -> np.ndarray:
+        store = self.tier2
+        if store is None:
+            return self.inv.postings(t)
+        hit = self._decode_cache.get(t)
+        if hit is None:
+            hit = store.postings(t)
+            if len(self._decode_cache) >= self._CACHE_TERMS:  # FIFO eviction
+                self._decode_cache.pop(next(iter(self._decode_cache)))
+            self._decode_cache[t] = hit
+        return hit
 
     # ------------------------------------------------------------- query
     def query_batch(self, queries: np.ndarray) -> list[np.ndarray]:
@@ -94,7 +123,9 @@ class BooleanEngine:
         for t in query:
             if t < 0 or len(out) == 0:
                 continue
-            p = self.inv.postings(int(t))
+            p = self._postings(int(t))
+            if len(p) == 0:  # term occurs nowhere: conjunction is empty
+                return out[:0]
             sel = np.searchsorted(p, out)
             sel = np.clip(sel, 0, len(p) - 1)
             out = out[p[sel] == out]
@@ -104,9 +135,12 @@ class BooleanEngine:
     def memory_report(self) -> dict[str, int]:
         """Bits used by each component (feeds the Eq.(2) comparison)."""
         s = self.state
-        return {
+        report = {
             "model_bits": self.lb.size_bits(),
             "tier1_bits": int(s.tier1.size * 32),
             "block_bitmap_bits": int(s.block_bitmaps.size * 32),
             "backup_bits": int(self.lb.backup_keys.size * 64),
         }
+        if self._tier2 is not None:
+            report["tier2_bits"] = self._tier2.size_bits()
+        return report
