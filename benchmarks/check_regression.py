@@ -1,0 +1,105 @@
+"""Benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
+
+Compares the metrics that matter per benchmark file and fails (exit 1) when
+any regresses beyond the tolerance:
+
+  BENCH_learned_postings.json   bits_per_posting per codec    (lower is better)
+  BENCH_guided_intersect.json   bytes_ratio, latency_ratio    (lower is better)
+
+Storage/bytes metrics are deterministic (seeded corpora), so any movement is
+a real code change.  The latency metric is the guided/full *ratio* measured
+from interleaved repeats within one run, so it is machine-normalized; it
+gets the same 15% tolerance plus an absolute floor (a shared CI runner's
+microarchitecture can legitimately shift the ratio a little, but guided
+falling to less than 2x the speed of full decode fails anywhere).
+Absolute ns_per_probe/qps numbers are informational only — they are not
+comparable across machines and are not gated.
+
+Usage:
+  python benchmarks/check_regression.py --baseline-dir . --fresh-dir fresh/
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TOLERANCE = 0.15  # >15% worse than baseline fails
+
+# (file, dotted-path of a lower-is-better metric, absolute floor the limit
+# is never taken below — nonzero only for wall-clock-derived metrics)
+METRICS = [
+    ("BENCH_learned_postings.json", "codecs.hybrid.bits_per_posting", 0.0),
+    ("BENCH_learned_postings.json", "codecs.plm.bits_per_posting", 0.0),
+    ("BENCH_learned_postings.json", "codecs.rmi.bits_per_posting", 0.0),
+    ("BENCH_learned_postings.json", "codecs.clustered/plm.bits_per_posting", 0.0),
+    ("BENCH_guided_intersect.json", "bytes_ratio", 0.0),
+    ("BENCH_guided_intersect.json", "store.bits_per_posting", 0.0),
+    ("BENCH_guided_intersect.json", "latency_ratio", 0.5),
+]
+
+
+def _lookup(obj, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def check(baseline_dir: str, fresh_dir: str, tolerance: float = TOLERANCE) -> list[str]:
+    failures = []
+    cache: dict[str, dict | None] = {}
+
+    def load(d: str, name: str):
+        path = os.path.join(d, name)
+        if path not in cache:
+            try:
+                with open(path) as f:
+                    cache[path] = json.load(f)
+            except FileNotFoundError:
+                cache[path] = None
+        return cache[path]
+
+    for fname, metric, floor in METRICS:
+        base, fresh = load(baseline_dir, fname), load(fresh_dir, fname)
+        if base is None:
+            print(f"SKIP {fname}:{metric} — no committed baseline")
+            continue
+        if fresh is None:
+            failures.append(f"{fname} missing from fresh results")
+            continue
+        b, f = _lookup(base, metric), _lookup(fresh, metric)
+        if b is None:
+            print(f"SKIP {fname}:{metric} — metric absent in baseline")
+            continue
+        if f is None:
+            failures.append(f"{fname}:{metric} absent in fresh results")
+            continue
+        limit = max(b * (1 + tolerance), floor)
+        verdict = "FAIL" if f > limit else "ok"
+        print(f"{verdict:4s} {fname}:{metric}  baseline={b:.4f}  fresh={f:.4f}  limit={limit:.4f}")
+        if f > limit:
+            failures.append(f"{fname}:{metric} regressed {f:.4f} > {limit:.4f} (baseline {b:.4f})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=".", help="dir with committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True, help="dir with freshly generated BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args()
+    failures = check(args.baseline_dir, args.fresh_dir, args.tolerance)
+    if failures:
+        print("\nbenchmark regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbenchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

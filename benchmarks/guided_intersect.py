@@ -1,0 +1,244 @@
+"""Guided vs full-decode conjunctive verification on a Zipf workload.
+
+The serving question: given Bloom-filtered candidates for an AND query, how
+many compressed-stream bytes must verification touch?  The full-decode path
+decompresses every query term's posting list; the model-guided path
+(repro.postings.search) answers contains() probes from PLM/RMI stream
+metadata plus ±ε correction windows, reading only the bytes the error bound
+proves necessary.
+
+Collection: Zipf-distributed document frequencies over three id regimes —
+mostly *smooth* lists (near-linear id growth with bounded jitter: the
+URL-sorted / crawl-ordered case where rank models win and correction bodies
+dominate stream bytes), plus arithmetic runs (degenerate width-0 lists) and
+rough uniform-random lists (where classical codecs win and probes fall back
+to full decode).  Workload: 2-5-term conjunctions with Zipf term draws
+(data/queries.zipf_conjunctions).  Candidates per query: the exact
+conjunction plus uniform false positives at FP_RATE of the universe — the
+shape a learned-Bloom tier-1 emits.
+
+Emits BENCH_guided_intersect.json:
+  guided.ns_per_probe   wall-clock per (term, candidate) contains() probe
+  guided/full.qps       verification throughput of each path
+  bytes_ratio           guided bytes touched / full-decode bytes touched
+                        (acceptance: < 0.10 on this workload)
+  bytes_ratio_unique    same numerator over each unique stream counted once
+                        (a full path with unbounded decoded-list cache)
+Both paths must return identical results (asserted against store decode).
+
+Accounting regime: `bytes_ratio` charges the full-decode path per access
+(decode-on-access — the memory-constrained setting tier-2 compression exists
+for, where decoded lists cannot all stay resident), while the guided path's
+fallback decodes are charged once per term because they are cached.
+`bytes_ratio_unique` is the other extreme: an unbounded decoded-list cache
+on the full side, where the guided path's remaining win is not holding any
+decoded list resident.  Real deployments sit between the two depending on
+the decode-cache budget.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.data.queries import zipf_conjunctions
+from repro.index.intersect import membership_mask
+from repro.postings import GuidedPostings, HybridPostings
+
+BENCH_PATH = "BENCH_guided_intersect.json"
+
+UNIVERSE = 8_000_000
+N_TERMS = 250
+DF_MAX = 50_000
+N_QUERIES = 240
+FP_RATE = 2e-4  # tier-1 false-positive mass relative to the universe
+REPS = 4  # interleaved timing passes per path (min taken; first warms caches)
+SEED = 23
+
+
+def _smooth_list(rng, df: int, universe: int) -> np.ndarray:
+    """Near-linear ids with bounded jitter: slope ≫ noise keeps them sorted;
+    corrections span ~slope/4 so the stream is correction-body dominated."""
+    max_slope = max(2, (universe - 1) // (df + 1) - 1)
+    slope = int(rng.integers(min(16, max_slope), min(256, max_slope) + 1))
+    noise_hi = max(1, slope // 4)
+    start = int(rng.integers(0, universe - df * slope - noise_hi))
+    ids = start + np.arange(df, dtype=np.int64) * slope + rng.integers(0, noise_hi, df)
+    return ids.astype(np.int32)
+
+
+def _run_list(rng, df: int, universe: int) -> np.ndarray:
+    """Arithmetic runs (step 1-3): the width-0 regime, near-pure model."""
+    step = int(rng.integers(1, 4))
+    start = int(rng.integers(0, universe - df * step - 1))
+    return np.arange(start, start + df * step, step, dtype=np.int64).astype(np.int32)
+
+
+def _rough_list(rng, df: int, universe: int) -> np.ndarray:
+    """Uniform-random sparse ids: classical codecs win, probes fall back."""
+    return np.sort(rng.choice(universe, size=df, replace=False)).astype(np.int32)
+
+
+def _synth_index(
+    rng, n_terms: int = N_TERMS, universe: int = UNIVERSE, df_max: int = DF_MAX
+) -> tuple[np.ndarray, np.ndarray]:
+    """Zipf-df lists over the three id regimes -> (term_offsets, doc_ids)."""
+    lists = []
+    for r in range(n_terms):
+        df = max(40, int(df_max * (r + 1) ** -0.9))
+        u = rng.random()
+        if u < 0.70:
+            ids = _smooth_list(rng, df, universe)
+        elif u < 0.85:
+            ids = _run_list(rng, df, universe)
+        else:
+            ids = _rough_list(rng, min(df, 4000), universe)
+        lists.append(np.unique(ids))
+    offsets = np.zeros(len(lists) + 1, np.int64)
+    np.cumsum([len(x) for x in lists], out=offsets[1:])
+    return offsets, np.concatenate(lists).astype(np.int32)
+
+
+def _candidates(result: np.ndarray, rng, universe: int = UNIVERSE) -> np.ndarray:
+    """Bloom-like candidate set: exact result ∪ uniform false positives."""
+    n_fp = max(16, int(FP_RATE * universe))
+    fps = rng.integers(0, universe, size=n_fp)
+    return np.union1d(result.astype(np.int64), fps).astype(np.int64)
+
+
+def _exact(store: HybridPostings, terms: list[int]) -> np.ndarray:
+    cur = store.postings(terms[0]).astype(np.int64)
+    for t in terms[1:]:
+        cur = np.intersect1d(cur, store.postings(t).astype(np.int64), assume_unique=True)
+        if cur.size == 0:
+            break
+    return cur
+
+
+def guided_rows(write_json: bool = True):
+    rng = np.random.default_rng(SEED)
+    offsets, doc_ids = _synth_index(rng)
+    t0 = time.time()
+    store = HybridPostings.build(offsets, doc_ids, UNIVERSE)
+    build_us = (time.time() - t0) * 1e6
+    n_postings = len(doc_ids)
+    dfs = np.diff(offsets)
+
+    queries = zipf_conjunctions(dfs, N_QUERIES, seed=SEED + 1)
+    qterms = [sorted((int(t) for t in q if t >= 0), key=lambda t: int(dfs[t]))
+              for q in queries]
+    exact = [_exact(store, ts) for ts in qterms]
+    cands = [_candidates(e, rng) for e in exact]
+
+    # ---- guided path: ε-window probes, smallest list first (engine order)
+    def run_guided(gp):
+        res = []
+        for ts, c in zip(qterms, cands):
+            out = c
+            for t in ts:
+                if out.size == 0:
+                    break
+                out = out[gp.contains(t, out)]
+            res.append(out)
+        return res
+
+    # ---- full-decode path: decompress every query term's stream, binary search
+    def run_full(count_bytes: list):
+        res = []
+        for ts, c in zip(qterms, cands):
+            out = c
+            for t in ts:
+                if out.size == 0:
+                    break
+                count_bytes[0] += 4 * int(store.streams[t].size)
+                out = out[membership_mask(store.postings(t).astype(np.int64), out)]
+            res.append(out)
+        return res
+
+    # interleave the timing reps (guided, full, guided, full, ...) so both
+    # paths sample the same CPU-frequency/cache conditions — the
+    # latency_ratio the CI gate compares is then stable run-to-run, where
+    # two sequential timing blocks drift apart
+    guided_s = full_s = np.inf
+    guided_res = full_res = None
+    counter = [0]
+    gp_warm = GuidedPostings(store)  # one engine across reps: model parsing
+    for _ in range(REPS):           # and fallback decodes amortize, as served
+        t0 = time.time()
+        guided_res = run_guided(gp_warm)
+        guided_s = min(guided_s, time.time() - t0)
+        t0 = time.time()
+        full_res = run_full(counter)
+        full_s = min(full_s, time.time() - t0)
+    full_bytes = counter[0] // REPS
+    gp = GuidedPostings(store)
+    run_guided(gp)  # byte accounting for exactly one workload pass
+    gstats = gp.stats.as_dict()
+
+    for g, f, e in zip(guided_res, full_res, exact):
+        assert np.array_equal(g, f), "guided and full-decode verification disagree"
+        assert np.array_equal(np.sort(g), e), "verification disagrees with exact AND"
+
+    probes = gstats["probes"]
+    bytes_ratio = gstats["guided_bytes"] / full_bytes
+    # alternative accounting: a full-decode path with an unbounded decoded-
+    # list cache touches each unique stream once; the guided path then trades
+    # bytes for not having to keep decoded lists resident at all
+    unique_terms = sorted({t for ts in qterms for t in ts})
+    full_unique_bytes = sum(4 * int(store.streams[t].size) for t in unique_terms)
+    traj = {
+        "workload": {
+            "universe": UNIVERSE,
+            "n_terms": N_TERMS,
+            "n_postings": int(n_postings),
+            "n_queries": N_QUERIES,
+            "avg_query_terms": float(np.mean([len(t) for t in qterms])),
+            "avg_candidates": float(np.mean([len(c) for c in cands])),
+            "fp_rate": FP_RATE,
+        },
+        "store": {
+            "bits_per_posting": store.size_bits() / n_postings,
+            "codec_histogram": store.codec_histogram(),
+        },
+        "guided": {
+            "seconds": guided_s,
+            "ns_per_probe": 1e9 * guided_s / max(probes, 1),
+            "qps": N_QUERIES / guided_s,
+            "bytes_touched": gstats["guided_bytes"],
+            "probes": probes,
+            "window_bytes": gstats["window_bytes"],
+            "metadata_bytes": gstats["metadata_bytes"],
+            "fallback_bytes": gstats["fallback_bytes"],
+            "routed_terms": gstats["routed_terms"],
+        },
+        "full": {
+            "seconds": full_s,
+            "qps": N_QUERIES / full_s,
+            "bytes_touched": full_bytes,
+            "unique_stream_bytes": full_unique_bytes,
+        },
+        "bytes_ratio": bytes_ratio,
+        "bytes_ratio_unique": gstats["guided_bytes"] / full_unique_bytes,
+        # machine-normalized latency metric for the CI regression gate:
+        # guided verification time as a fraction of full-decode time on the
+        # same run (absolute ns/probe is not comparable across machines)
+        "latency_ratio": guided_s / full_s,
+    }
+    rows = [
+        ("guided/build_store", build_us, f"bits_per_posting={traj['store']['bits_per_posting']:.3f}"),
+        ("guided/probe", 1e-3 * traj["guided"]["ns_per_probe"],
+         f"qps={traj['guided']['qps']:.1f}"),
+        ("guided/full_decode", 1e6 * full_s / N_QUERIES, f"qps={traj['full']['qps']:.1f}"),
+        ("guided/bytes_ratio", 0.0, f"guided_touches={bytes_ratio:.4f}_of_full"),
+    ]
+    if write_json:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(traj, f, indent=2)
+        rows.append(("guided/json", 0.0, f"wrote {BENCH_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in guided_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -79,3 +79,8 @@ def learned_rows(write_json: bool = True):
             json.dump(traj, f, indent=2)
         rows.append((f"learned/json", 0.0, f"wrote {BENCH_PATH}"))
     return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in learned_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fig3/..   % guaranteed-correct queries          (paper Fig 3)
   codec/..  compression ratios (OptPFD vs others) (paper §4 setup)
   learned/.. learned-vs-classical bits/posting    (+ BENCH_learned_postings.json)
+  guided/.. model-guided vs full-decode verify    (+ BENCH_guided_intersect.json)
   kernel/.. Pallas kernels, interpret-mode        (plumbing check)
   roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
 """
@@ -20,6 +21,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     from benchmarks.paper_figs import _collections, fig1_rows, fig2_rows, fig3_rows
     from benchmarks.codec_kernels import codec_rows, kernel_rows
+    from benchmarks.guided_intersect import guided_rows
     from benchmarks.learned_postings import learned_rows
     from benchmarks.roofline import rows_from_file
 
@@ -31,6 +33,7 @@ def main() -> None:
     rows += fig3_rows(colls)
     rows += codec_rows()
     rows += learned_rows()
+    rows += guided_rows()
     rows += kernel_rows()
     for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
         if os.path.exists(path):

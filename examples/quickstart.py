@@ -11,7 +11,7 @@ from repro.common.config import CorpusConfig, LearnedIndexConfig, OptimizerConfi
 from repro.core import estimate_gain, fit_thresholds, init_membership, membership_loss
 from repro.data.corpus import synthesize_corpus
 from repro.data.loader import membership_batches
-from repro.data.queries import brute_force_answers, sample_queries
+from repro.data.queries import brute_force_answers, sample_queries, zipf_conjunctions
 from repro.index.build import build_inverted_index
 from repro.serve import BooleanEngine, ServeConfig
 from repro.train import init_train_state, make_train_step
@@ -56,6 +56,23 @@ def main():
     print(f"tier-2 hybrid store: {bpp:.2f} bits/posting (raw 32.00), "
           f"codec split {eng.tier2.codec_histogram()}")
     assert ok
+
+    # 7. model-guided conjunctive serving: a batched 2-5-term AND workload
+    # verified by ε-window probes on the learned streams (no full decode on
+    # the learned terms) — see README "Serving" and BENCH_guided_intersect
+    conj = zipf_conjunctions(inv.dfs, 8, seed=3)
+    conj_results = eng.query_batch(conj)
+    conj_exact = brute_force_answers(corpus, conj)
+    assert all(np.array_equal(r, e) for r, e in zip(conj_results, conj_exact))
+    report = eng.memory_report()
+    print(f"guided conjunctive batch: {len(conj)} queries, "
+          f"{sum(len(r) for r in conj_results)} result docs")
+    print("memory report (bits):", report)
+    assert "tier2_bits" in report
+    guided = eng.serving_stats()["guided"]
+    print(f"guided probes: {guided['probes']}, bytes touched "
+          f"{guided['guided_bytes']} vs full-decode {guided['full_equiv_bytes']} "
+          f"(ratio {guided['bytes_ratio']:.3f})")
 
 
 if __name__ == "__main__":

@@ -37,6 +37,43 @@ def sample_queries(
     return out
 
 
+def zipf_conjunctions(
+    dfs: np.ndarray,
+    n_queries: int,
+    *,
+    min_terms: int = 2,
+    max_terms: int = 5,
+    zipf_a: float = 1.2,
+    seed: int = 29,
+) -> np.ndarray:
+    """Conjunctive query workload: Zipf term draws, 2-5 term AND queries.
+
+    Term *ranks* are drawn from a truncated Zipf(a) and mapped onto the
+    vocabulary ordered by descending document frequency, so frequent terms
+    dominate queries (the conjunctive-serving stress case: long posting
+    lists, small intersections).  Terms are distinct within a query and only
+    terms with nonzero df are drawn.  Returns (n_queries, max_terms) int32,
+    -1 padded.
+    """
+    if not 1 <= min_terms <= max_terms:
+        raise ValueError(f"need 1 <= min_terms <= max_terms, got {min_terms}..{max_terms}")
+    rng = np.random.default_rng(seed)
+    dfs = np.asarray(dfs)
+    by_df = np.argsort(-dfs, kind="stable")  # rank 0 = most frequent term
+    vocab = by_df[dfs[by_df] > 0]
+    if len(vocab) < max_terms:
+        raise ValueError(f"only {len(vocab)} nonempty terms < max_terms={max_terms}")
+    ranks = np.arange(1, len(vocab) + 1, dtype=np.float64)
+    p = ranks ** -zipf_a
+    p /= p.sum()
+    out = np.full((n_queries, max_terms), -1, dtype=np.int32)
+    lengths = rng.integers(min_terms, max_terms + 1, size=n_queries)
+    for i, L in enumerate(lengths):
+        picks = rng.choice(len(vocab), size=int(L), replace=False, p=p)
+        out[i, :L] = vocab[picks]
+    return out
+
+
 def brute_force_answers(corpus: Corpus, queries: np.ndarray) -> list[np.ndarray]:
     """Exact conjunctive Boolean answers (oracle for tests/benchmarks)."""
     from repro.index.build import build_inverted_index

@@ -107,8 +107,20 @@ def pack_bits(vals: np.ndarray, width: int) -> np.ndarray:
 def unpack_bits(words: np.ndarray, width: int, n: int) -> np.ndarray:
     if width == 0 or n == 0:
         return np.zeros(n, dtype=np.uint32)
+    return unpack_bits_at(words, width, np.arange(n, dtype=np.int64))
+
+
+def unpack_bits_at(words: np.ndarray, width: int, indices: np.ndarray) -> np.ndarray:
+    """Unpack only the values at `indices` from a pack_bits stream.
+
+    The guided-search probe path decodes ε-windows, not whole lists, so it
+    must read packed corrections at arbitrary positions without touching the
+    rest of the stream.
+    """
+    if width == 0 or len(indices) == 0:
+        return np.zeros(len(indices), dtype=np.uint32)
     w = words.astype(np.uint64)
-    bitpos = np.arange(n, dtype=np.int64) * width
+    bitpos = np.asarray(indices, dtype=np.int64) * width
     word_idx, off = bitpos // 32, (bitpos % 32).astype(np.uint64)
     lo = w[word_idx] >> off
     nxt = np.where(word_idx + 1 < len(w), w[np.minimum(word_idx + 1, len(w) - 1)], 0)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for batched ε-window membership/rank probes.
+
+One batch row = one (term, candidate) probe: the candidate's rank bracket
+[r_lo, r_lo + n_valid) inside one model segment, with the window's
+corrections already unpacked.  Decode uses the canonical single-multiply
+float32 + banker's-rint formula of repro.postings.plm.eval_segments, so the
+window ids — and therefore the probe verdicts — are bit-identical to the
+host decode path and to the Pallas kernel.
+
+Outputs per probe: found (1 iff candidate present) and lt (#window ids
+strictly below the candidate; host adds r_lo to get the global rank).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe_ref(
+    seg_starts: jnp.ndarray,  # (P, 1) int32 rank of the segment's first posting
+    bases: jnp.ndarray,  # (P, 1) int32 integer intercept
+    slopes: jnp.ndarray,  # (P, 1) float32
+    r_lo: jnp.ndarray,  # (P, 1) int32 first rank of the probe window
+    n_valid: jnp.ndarray,  # (P, 1) int32 window length (may be 0)
+    cands: jnp.ndarray,  # (P, 1) int32 candidate doc ids
+    corr: jnp.ndarray,  # (P, W) int32 window corrections
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (found (P,1) int32, lt (P,1) int32)."""
+    W = corr.shape[1]
+    j = jnp.arange(W, dtype=jnp.int32)[None, :]
+    ranks = r_lo + j
+    di = (ranks - seg_starts).astype(jnp.float32)
+    pred = bases + jnp.rint(slopes * di).astype(jnp.int32)
+    ids = pred + corr
+    valid = j < n_valid
+    found = (valid & (ids == cands)).any(axis=1, keepdims=True).astype(jnp.int32)
+    lt = (valid & (ids < cands)).sum(axis=1, keepdims=True).astype(jnp.int32)
+    return found, lt

@@ -18,17 +18,22 @@ from repro.postings.hybrid import (
 )
 from repro.postings.plm import DEFAULT_EPS, fit_segments, plm_decode, plm_encode, plm_size_bits
 from repro.postings.rmi import fit_rmi, rmi_decode, rmi_encode, rmi_size_bits
+from repro.postings.search import GuidedPostings, ProbeStats, TermModel, load_term_model
 
 __all__ = [
     "CANDIDATES",
     "DEFAULT_EPS",
+    "GuidedPostings",
     "HybridPostings",
+    "ProbeStats",
+    "TermModel",
     "choose_codec",
     "fit_rmi",
     "fit_segments",
     "hybrid_decode",
     "hybrid_encode",
     "hybrid_size_bits",
+    "load_term_model",
     "plm_decode",
     "plm_encode",
     "plm_size_bits",

@@ -134,11 +134,16 @@ def emit_stream(
     )
 
 
-def parse_stream(words: np.ndarray, n: int) -> tuple[np.ndarray, ...]:
-    """Inverse of emit_stream -> (starts i64, bases i64, slopes f32, corr i64).
+def parse_segments(
+    words: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, int, np.ndarray]:
+    """Header + segment tables only, corrections left packed.
 
-    bases round-trip through a signed int32 view (an RMI intercept fold can
-    push a base slightly negative)."""
+    -> (starts i64, bases i64, slopes f32, corr_width, corr_min, corr_words).
+    The single owner of the stream layout: full decode (parse_stream) and the
+    guided-search metadata loader both build on it.  bases round-trip through
+    a signed int32 view (an RMI intercept fold can push a base slightly
+    negative)."""
     s = int(words[0])
     width = int(words[1]) & 0xFF
     corr_min = int(np.int32(np.uint32(words[2])))
@@ -146,7 +151,13 @@ def parse_stream(words: np.ndarray, n: int) -> tuple[np.ndarray, ...]:
     starts = words[p : p + s].astype(np.int64); p += s
     bases = words[p : p + s].astype(np.uint32).view(np.int32).astype(np.int64); p += s
     slopes = words[p : p + s].view(np.float32); p += s
-    corr = unpack_bits(words[p:], width, n).astype(np.int64) + corr_min
+    return starts, bases, slopes, width, corr_min, words[p:]
+
+
+def parse_stream(words: np.ndarray, n: int) -> tuple[np.ndarray, ...]:
+    """Inverse of emit_stream -> (starts i64, bases i64, slopes f32, corr i64)."""
+    starts, bases, slopes, width, corr_min, corr_words = parse_segments(words)
+    corr = unpack_bits(corr_words, width, n).astype(np.int64) + corr_min
     return starts, bases, slopes, corr
 
 

@@ -5,21 +5,25 @@ Pipeline per batch of queries (pad-to-bucket batching):
   2. learned-Bloom scoring (zero false negatives) produces candidate masks;
   3. optional `verified` mode re-checks candidates against the exact tier-2
      postings (the paper's fallback structure) -> exact conjunctive results.
-     Tier-2 is served from the hybrid learned/classical compressed store
-     (repro.postings.HybridPostings, built lazily on first verification) so
-     the fallback pays min-bits storage, not raw int32 arrays;
+     Verification is *model-guided*: terms are visited smallest-list-first,
+     and learned-codec terms answer contains() probes straight from PLM/RMI
+     stream metadata (predict rank, decode only the ±ε correction window —
+     repro.postings.search), so the hot path reads ε-window bytes instead of
+     whole compressed lists.  Classical-codec terms fall back to full decode
+     through a decode-cost-budgeted LRU cache, membership via galloping
+     search (index/intersect.py);
   4. results returned as packed bitmaps (32x cheaper to move than id lists)
      plus materialized doc ids per query.
 
 The Pallas membership kernel (kernels/membership) is used for the doc-scan
-algorithms when `use_kernel=True`; the pure-jnp path is the reference.
+algorithms when `use_kernel=True`; the guided-probe batches can run on the
+kernels/guided_search Pallas kernel with `guided_kernel=True` (pure
+numpy/jnp paths are the references).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,7 +31,9 @@ from repro.common.config import LearnedIndexConfig
 from repro.core import algorithms as alg
 from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex
+from repro.index.intersect import gallop_membership
 from repro.kernels.membership.ops import score_terms_bitmask
+from repro.serve.cache import CostLRU
 
 
 @dataclass
@@ -37,6 +43,9 @@ class ServeConfig:
     use_kernel: bool = False
     max_query_terms: int = 8
     postings_store: str = "hybrid"  # tier-2 backing: "hybrid" (compressed) | "raw"
+    use_guided: bool = True  # model-guided contains() probes for learned terms
+    guided_kernel: bool = False  # batch probes on the Pallas guided_search kernel
+    cache_budget_bytes: int = 32 << 20  # decode-cost budget of the tier-2 LRU
 
 
 class BooleanEngine:
@@ -51,7 +60,9 @@ class BooleanEngine:
         self.inv = inv
         self.lb = lb
         self._tier2 = None  # lazy HybridPostings (built on first verification)
-        self._decode_cache: dict[int, np.ndarray] = {}  # FIFO, _CACHE_TERMS max
+        self._guided = None  # lazy GuidedPostings over tier-2
+        self._dfs = inv.dfs  # materialized once; _verify sorts terms by df per query
+        self._decode_cache: CostLRU[int, np.ndarray] = CostLRU(self.cfg.cache_budget_bytes)
         self.state = alg.build_engine(
             lb.params, lb.tau, inv,
             truncation_k=li_cfg.truncation_k, block_size=li_cfg.block_size,
@@ -66,18 +77,28 @@ class BooleanEngine:
             self._tier2 = HybridPostings.from_index(self.inv)
         return self._tier2
 
-    _CACHE_TERMS = 1024  # hot-term decoded lists kept resident
+    @property
+    def guided(self):
+        """Model-guided prober over tier-2 (None when serving raw postings)."""
+        if self._guided is None:
+            store = self.tier2
+            if store is not None and self.cfg.use_guided:
+                from repro.postings import GuidedPostings
+
+                self._guided = GuidedPostings(
+                    store, fallback=self._postings, use_kernel=self.cfg.guided_kernel
+                )
+        return self._guided
 
     def _postings(self, t: int) -> np.ndarray:
+        """Fully-decoded postings of term t, via the cost-budgeted LRU."""
         store = self.tier2
         if store is None:
             return self.inv.postings(t)
         hit = self._decode_cache.get(t)
         if hit is None:
             hit = store.postings(t)
-            if len(self._decode_cache) >= self._CACHE_TERMS:  # FIFO eviction
-                self._decode_cache.pop(next(iter(self._decode_cache)))
-            self._decode_cache[t] = hit
+            self._decode_cache.put(t, hit, hit.nbytes)
         return hit
 
     # ------------------------------------------------------------- query
@@ -118,17 +139,29 @@ class BooleanEngine:
         return bits
 
     def _verify(self, query: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        """Exact re-check against tier-2 postings (paper's fallback)."""
+        """Exact candidate re-check against tier-2, smallest list first.
+
+        Visiting terms in ascending document frequency shrinks the candidate
+        set fastest; each term then filters the (sorted) survivors either by
+        guided ε-window probes (learned-codec terms) or by galloping search
+        over the fully-decoded list (classical codecs / raw store).
+        """
         out = ids
-        for t in query:
-            if t < 0 or len(out) == 0:
-                continue
-            p = self._postings(int(t))
-            if len(p) == 0:  # term occurs nowhere: conjunction is empty
-                return out[:0]
-            sel = np.searchsorted(p, out)
-            sel = np.clip(sel, 0, len(p) - 1)
-            out = out[p[sel] == out]
+        terms = sorted({int(t) for t in query if t >= 0})  # dedupe repeats
+        if not terms or len(out) == 0:
+            return out
+        dfs = self._dfs
+        terms.sort(key=lambda t: int(dfs[t]))
+        if int(dfs[terms[0]]) == 0:  # some term occurs nowhere: empty AND
+            return out[:0]
+        guided = self.guided
+        for t in terms:
+            if len(out) == 0:
+                break
+            if guided is not None:
+                out = out[guided.contains(t, out)]
+            else:
+                out = out[gallop_membership(self._postings(t), out)]
         return out
 
     # ------------------------------------------------------------- stats
@@ -144,3 +177,10 @@ class BooleanEngine:
         if self._tier2 is not None:
             report["tier2_bits"] = self._tier2.size_bits()
         return report
+
+    def serving_stats(self) -> dict[str, dict]:
+        """Hot-path accounting: decode-cache behaviour + guided-probe bytes."""
+        stats: dict[str, dict] = {"decode_cache": self._decode_cache.stats()}
+        if self._guided is not None:
+            stats["guided"] = self._guided.stats.as_dict()
+        return stats

@@ -1,0 +1,356 @@
+"""Model-guided intersection: probe bit-exactness vs full decode on every
+codec, the guided_search kernel vs its jnp reference, the cost-keyed LRU,
+galloping membership (incl. candidates beyond the list max — the _verify
+clipping shadow), the Zipf conjunctive workload generator, and end-to-end
+query_batch agreement between hybrid and raw tier-2 stores."""
+import numpy as np
+import pytest
+
+from repro.index.build import InvertedIndex
+from repro.index.compress import decode_postings
+from repro.index.intersect import gallop_membership, membership_mask
+from repro.postings import GuidedPostings, HybridPostings, load_term_model
+from repro.postings.plm import plm_encode
+from repro.postings.rmi import rmi_encode
+from repro.serve.cache import CostLRU
+
+
+def _random_list(rng, n, universe):
+    n = min(n, universe)
+    return np.sort(rng.choice(universe, size=n, replace=False)).astype(np.int32)
+
+
+def _probe_set(rng, ids, universe):
+    """Present + absent + boundary candidates (0, below min, beyond max)."""
+    extremes = [0, universe - 1, universe + 1000]
+    if len(ids):
+        extremes += [int(ids[0]) - 1, int(ids[-1]) + 1]
+    return np.unique(np.concatenate([
+        ids[:: max(1, len(ids) // 40)].astype(np.int64),
+        rng.integers(0, universe + 10, 120),
+        np.array(extremes, np.int64).clip(0),
+    ]))
+
+
+# ------------------------------------------------------- guided probes
+@pytest.mark.parametrize("enc,codec", [(plm_encode, "plm"), (rmi_encode, "rmi")])
+@pytest.mark.parametrize("n", [1, 5, 129, 1000, 4000])
+def test_guided_probe_bit_exact_vs_full_decode(enc, codec, n):
+    """Acceptance: contains()/rank() from stream metadata == full decode."""
+    rng = np.random.default_rng(n)
+    universe = 1 << 22
+    ids = _random_list(rng, n, universe)
+    words = enc(ids)
+    assert np.array_equal(decode_postings(words, n, codec), ids)
+    tm = load_term_model(words, n)
+    cands = _probe_set(rng, ids, universe)
+    gp = GuidedPostings.__new__(GuidedPostings)
+    from repro.postings.search import ProbeStats
+
+    gp.stats = ProbeStats()
+    found, rank = gp._probe_host(tm, cands)
+    ids64 = ids.astype(np.int64)
+    assert np.array_equal(found, np.isin(cands, ids64))
+    assert np.array_equal(rank, np.searchsorted(ids64, cands, side="left"))
+
+
+def test_guided_probe_smooth_lists_window_is_tiny():
+    """The ε-window cost model: near-linear lists probe in O(1) ranks."""
+    ids = (np.arange(5000, dtype=np.int64) * 64 + 7).astype(np.int32)
+    tm = load_term_model(plm_encode(ids), len(ids))
+    assert tm.avg_window < 4.0
+
+
+@pytest.mark.parametrize("store_seed", [3, 4])
+def test_guided_store_probes_match_postings_every_codec(store_seed):
+    """Acceptance: GuidedPostings over a hybrid store (learned probes +
+    classical fallback) agrees with store.postings membership everywhere."""
+    rng = np.random.default_rng(store_seed)
+    lists = [
+        _random_list(rng, 300, 1 << 20),  # random sparse -> classical codec
+        np.arange(0, 6000, 3, dtype=np.int32),  # arithmetic -> plm, width 0
+        (np.arange(2000, dtype=np.int64) * 50
+         + rng.integers(0, 12, 2000)).astype(np.int32),  # smooth -> learned
+        _random_list(rng, 5, 1 << 20),  # tiny list
+        np.zeros(0, np.int32),  # empty term
+    ]
+    universe = 1 << 21
+    offsets = np.zeros(len(lists) + 1, np.int64)
+    np.cumsum([len(x) for x in lists], out=offsets[1:])
+    store = HybridPostings.build(offsets, np.concatenate(lists), universe)
+    gp = GuidedPostings(store)
+    assert len(store.codec_histogram()) >= 2  # both learned and classical hit
+    for t, ids in enumerate(lists):
+        cands = _probe_set(rng, ids, universe)
+        found, rank = gp.probe(t, cands)
+        ids64 = ids.astype(np.int64)
+        assert np.array_equal(found, np.isin(cands, ids64)), f"term {t}"
+        assert np.array_equal(rank, np.searchsorted(ids64, cands)), f"term {t}"
+    assert gp.stats.probes > 0
+    assert gp.stats.guided_bytes() > 0
+
+
+def test_guided_cost_model_routes_huge_candidate_sets():
+    """Probing more windows than the list has ranks must fall back."""
+    ids = (np.arange(500, dtype=np.int64) * 40
+           + np.random.default_rng(0).integers(0, 9, 500)).astype(np.int32)
+    offsets = np.array([0, len(ids)], np.int64)
+    store = HybridPostings.build(offsets, ids, 1 << 18)
+    gp = GuidedPostings(store)
+    assert gp.is_guided(0)  # learned-coded term...
+    cands = np.arange(0, 1 << 16, dtype=np.int64)
+    found, rank = gp.probe(0, cands)
+    assert gp.stats.routed_terms == 1  # ...but this probe full-decoded
+    assert np.array_equal(found, np.isin(cands, ids.astype(np.int64)))
+    assert np.array_equal(rank, np.searchsorted(ids.astype(np.int64), cands))
+
+
+def test_guided_byte_accounting_monotone():
+    """Stats must grow with probing and stay below full-decode equivalents
+    for small candidate sets on long smooth lists."""
+    ids = (np.arange(20000, dtype=np.int64) * 100
+           + np.random.default_rng(1).integers(0, 20, 20000)).astype(np.int32)
+    store = HybridPostings.build(np.array([0, len(ids)], np.int64), ids, 1 << 22)
+    gp = GuidedPostings(store)
+    cands = ids[::1000].astype(np.int64)
+    gp.probe(0, cands)
+    s = gp.stats
+    assert s.window_bytes > 0
+    assert s.guided_bytes() < s.full_equiv_bytes / 10
+
+
+# ------------------------------------------------------------- kernel
+def test_guided_kernel_matches_host_and_ref():
+    import jax.numpy as jnp
+
+    from repro.index.compress import unpack_bits_at
+    from repro.kernels.guided_search.kernel import probe_batch
+    from repro.kernels.guided_search.ops import probe_windows
+    from repro.kernels.guided_search.ref import probe_ref
+    from repro.postings.search import ProbeStats, flatten_windows
+
+    rng = np.random.default_rng(7)
+    for enc in (plm_encode, rmi_encode):
+        ids = _random_list(rng, 2500, 1 << 22)
+        tm = load_term_model(enc(ids), len(ids))
+        cands = _probe_set(rng, ids, 1 << 22)
+        gp = GuidedPostings.__new__(GuidedPostings)
+        gp.stats = ProbeStats()
+        hf, hr = gp._probe_host(tm, cands)
+        kf, kr, touched = probe_windows(tm, cands)
+        assert np.array_equal(hf, kf)
+        assert np.array_equal(hr, kr)
+        assert touched >= 0
+        # ref vs kernel on identical padded inputs
+        seg, r_lo, lens, probe_of, col, flat = flatten_windows(tm, cands)
+        P, W = len(cands), 128
+        corr = np.zeros((P, W), np.int32)
+        corr[probe_of, col] = (
+            unpack_bits_at(tm.corr_words, tm.width, flat).astype(np.int64) + tm.corr_min
+        ).astype(np.int32)
+        cv = lambda a, d: jnp.asarray(np.asarray(a, d).reshape(P, 1))
+        args = (cv(tm.starts[seg], np.int32), cv(tm.bases[seg], np.int32),
+                cv(tm.slopes[seg], np.float32), cv(r_lo, np.int32),
+                cv(lens, np.int32), cv(cands, np.int32), jnp.asarray(corr))
+        rf, rl = probe_ref(*args)
+        bf, bl = probe_batch(*args)
+        assert np.array_equal(np.asarray(rf), np.asarray(bf))
+        assert np.array_equal(np.asarray(rl), np.asarray(bl))
+
+
+def test_guided_kernel_wide_window_split_matches_host():
+    """Brackets wider than MAX_W (degenerate slope -> whole-segment scan)
+    must be host-decoded without widening the kernel batch, bit-exactly."""
+    from repro.kernels.guided_search.ops import MAX_W, probe_windows
+    from repro.postings.plm import emit_stream
+    from repro.postings.search import ProbeStats, rank_windows
+
+    rng = np.random.default_rng(19)
+    ids = _random_list(rng, 1500, 1 << 21)
+    # a valid lossless stream with slope 0: corrections carry everything,
+    # so every probe bracket is the whole list (1500 > MAX_W ranks)
+    words = emit_stream(ids, np.array([0], np.int64),
+                        np.array([int(ids[0])], np.int64),
+                        np.array([0.0], np.float32), eps=0)
+    assert np.array_equal(decode_postings(words, len(ids), "plm"), ids)
+    tm = load_term_model(words, len(ids))
+    cands = _probe_set(rng, ids, 1 << 21)
+    _, r_lo, r_hi = rank_windows(tm, cands)
+    assert (np.maximum(r_hi - r_lo + 1, 0) > MAX_W).any()
+    gp = GuidedPostings.__new__(GuidedPostings)
+    gp.stats = ProbeStats()
+    hf, hr = gp._probe_host(tm, cands)
+    kf, kr, _ = probe_windows(tm, cands)
+    assert np.array_equal(hf, kf)
+    assert np.array_equal(hr, kr)
+    ids64 = ids.astype(np.int64)
+    assert np.array_equal(hf, np.isin(cands, ids64))
+    assert np.array_equal(hr, np.searchsorted(ids64, cands))
+
+
+def test_engine_guided_kernel_path_matches_host():
+    """GuidedPostings(use_kernel=True) must agree with the host path."""
+    rng = np.random.default_rng(11)
+    ids = (np.arange(3000, dtype=np.int64) * 30
+           + rng.integers(0, 7, 3000)).astype(np.int32)
+    store = HybridPostings.build(np.array([0, len(ids)], np.int64), ids, 1 << 18)
+    cands = _probe_set(rng, ids, 1 << 18)
+    f1, r1 = GuidedPostings(store).probe(0, cands)
+    f2, r2 = GuidedPostings(store, use_kernel=True).probe(0, cands)
+    assert np.array_equal(f1, f2)
+    assert np.array_equal(r1, r2)
+
+
+# ----------------------------------------------------- gallop / clipping
+def test_membership_beyond_list_max_clipping_shadow():
+    """sel == len(p) candidates must clamp to p[-1] and only match equals."""
+    p = np.array([2, 5, 9, 14], np.int64)
+    cands = np.array([1, 2, 14, 15, 100, 10_000], np.int64)
+    expect = np.array([False, True, True, False, False, False])
+    assert np.array_equal(membership_mask(p, cands), expect)
+    assert np.array_equal(gallop_membership(p, cands), expect)
+    # degenerate: all candidates beyond the max
+    far = np.array([20, 21, 22], np.int64)
+    assert not membership_mask(p, far).any()
+    assert not gallop_membership(p, far).any()
+
+
+@pytest.mark.parametrize("n_cands", [3, 50, 3000])
+def test_gallop_matches_binary_search(n_cands):
+    rng = np.random.default_rng(n_cands)
+    p = np.sort(rng.choice(1 << 20, 4000, replace=False)).astype(np.int64)
+    cands = np.sort(np.unique(np.concatenate([
+        rng.choice(p, min(n_cands, len(p)) // 2 + 1),
+        rng.integers(0, (1 << 20) + 50, n_cands),
+    ])))
+    assert np.array_equal(gallop_membership(p, cands), membership_mask(p, cands))
+
+
+def test_verify_candidates_beyond_list_max():
+    """_verify with candidate ids above every posting (the clip shadow)."""
+    from repro.serve.boolean import ServeConfig
+    from tests.test_postings import _bare_engine
+
+    inv = InvertedIndex(
+        n_docs=1000,
+        n_terms=2,
+        term_offsets=np.array([0, 4, 8], np.int64),
+        doc_ids=np.array([1, 5, 9, 20, 5, 9, 20, 900], np.int32),
+    )
+    for cfg in (ServeConfig(postings_store="raw"), ServeConfig(postings_store="hybrid")):
+        eng = _bare_engine(inv, cfg)
+        cands = np.array([5, 9, 21, 500, 900, 999], np.int32)  # 21.. > term-0 max
+        out = eng._verify(np.array([0, 1], np.int32), cands)
+        assert out.tolist() == [5, 9]
+
+
+# ----------------------------------------------------------------- LRU
+def test_cost_lru_evicts_by_cost_and_recency():
+    lru = CostLRU(100)
+    lru.put("a", "A", 40)
+    lru.put("b", "B", 40)
+    assert lru.get("a") == "A"  # a is now MRU
+    lru.put("c", "C", 40)  # budget forces one eviction: LRU is b
+    assert lru.get("b") is None
+    assert lru.get("a") == "A"
+    assert lru.get("c") == "C"
+    assert lru.evictions == 1
+    assert lru.total_cost == 80
+
+
+def test_cost_lru_always_keeps_newest():
+    lru = CostLRU(10)
+    lru.put("big", "X", 10_000)  # over budget alone: still resident
+    assert lru.get("big") == "X"
+    lru.put("next", "Y", 5)
+    assert lru.get("big") is None  # evicted once something newer lands
+    assert lru.get("next") == "Y"
+
+
+def test_cost_lru_rejects_nonpositive_budget():
+    with pytest.raises(ValueError):
+        CostLRU(0)
+
+
+# ------------------------------------------------------------ workload
+def test_zipf_conjunctions_shape_and_validity():
+    from repro.data.queries import zipf_conjunctions
+
+    dfs = np.concatenate([np.zeros(5, np.int64), np.arange(1, 200)])
+    q = zipf_conjunctions(dfs, 64, seed=5)
+    assert q.shape == (64, 5)
+    assert q.dtype == np.int32
+    for row in q:
+        terms = row[row >= 0]
+        assert 2 <= len(terms) <= 5
+        assert len(np.unique(terms)) == len(terms)  # distinct within a query
+        assert (dfs[terms] > 0).all()  # never draws empty terms
+    # -1 padding is a suffix
+    assert all((row[row.argmin():] < 0).all() or (row >= 0).all() for row in q)
+
+
+def test_zipf_conjunctions_biases_frequent_terms():
+    from repro.data.queries import zipf_conjunctions
+
+    dfs = np.arange(1, 501)  # term 499 is the most frequent
+    q = zipf_conjunctions(dfs, 400, seed=6)
+    drawn = q[q >= 0]
+    # the most frequent decile must dominate the draws
+    assert (dfs[drawn] > 450).mean() > 0.5
+
+
+# --------------------------------------------------- engine end-to-end
+@pytest.fixture(scope="module")
+def tiny_system():
+    import jax
+
+    from repro.common.config import CorpusConfig, LearnedIndexConfig
+    from repro.core import fit_thresholds, init_membership
+    from repro.data.corpus import synthesize_corpus
+    from repro.index.build import build_inverted_index
+
+    corpus = synthesize_corpus(CorpusConfig(n_docs=400, n_terms=1600, avg_doc_len=50, seed=31))
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(embed_dim=16, truncation_k=16, block_size=64)
+    params, _ = init_membership(jax.random.key(2), li_cfg, corpus.n_terms, corpus.n_docs)
+    lb = fit_thresholds(params, inv)  # untrained: zero FN still guaranteed
+    return corpus, inv, li_cfg, lb
+
+
+def test_query_batch_hybrid_vs_raw_agree_exactly(tiny_system):
+    """Acceptance (serve path): verified results over the compressed hybrid
+    store must equal the raw-store results, and both the brute-force AND."""
+    from repro.data.queries import brute_force_answers, sample_queries
+    from repro.serve import BooleanEngine, ServeConfig
+
+    corpus, inv, li_cfg, lb = tiny_system
+    q = sample_queries(corpus, 24, seed=8)
+    hybrid = BooleanEngine(lb, inv, li_cfg,
+                           ServeConfig(algorithm="block", verified=True,
+                                       postings_store="hybrid"))
+    raw = BooleanEngine(lb, inv, li_cfg,
+                        ServeConfig(algorithm="block", verified=True,
+                                    postings_store="raw"))
+    rh = hybrid.query_batch(q)
+    rr = raw.query_batch(q)
+    exact = brute_force_answers(corpus, q)
+    for h, r, e in zip(rh, rr, exact):
+        assert np.array_equal(h, r)
+        assert np.array_equal(h, e)
+    stats = hybrid.serving_stats()
+    assert stats["guided"]["probes"] > 0
+    assert "decode_cache" in stats
+
+
+def test_query_batch_guided_vs_unguided_agree(tiny_system):
+    from repro.data.queries import sample_queries
+    from repro.serve import BooleanEngine, ServeConfig
+
+    corpus, inv, li_cfg, lb = tiny_system
+    q = sample_queries(corpus, 16, seed=9)
+    guided = BooleanEngine(lb, inv, li_cfg,
+                           ServeConfig(verified=True, use_guided=True))
+    plain = BooleanEngine(lb, inv, li_cfg,
+                          ServeConfig(verified=True, use_guided=False))
+    for a, b in zip(guided.query_batch(q), plain.query_batch(q)):
+        assert np.array_equal(a, b)

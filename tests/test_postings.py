@@ -185,10 +185,25 @@ def test_eliasfano_size_dense_branch():
     assert eliasfano_size_bits(ids, universe=50) >= bits  # clamped to max id + 1
 
 
+def _bare_engine(inv, cfg):
+    """Engine with only the verification plumbing (skip model training)."""
+    from repro.serve.boolean import BooleanEngine
+    from repro.serve.cache import CostLRU
+
+    eng = BooleanEngine.__new__(BooleanEngine)
+    eng.cfg = cfg
+    eng.inv = inv
+    eng._tier2 = None
+    eng._guided = None
+    eng._dfs = inv.dfs
+    eng._decode_cache = CostLRU(cfg.cache_budget_bytes)
+    return eng
+
+
 def test_verify_empty_postings_regression():
     """BooleanEngine._verify must not index p[-1] when a term has no postings."""
     from repro.index.build import InvertedIndex
-    from repro.serve.boolean import BooleanEngine, ServeConfig
+    from repro.serve.boolean import ServeConfig
 
     inv = InvertedIndex(
         n_docs=8,
@@ -196,11 +211,7 @@ def test_verify_empty_postings_regression():
         term_offsets=np.array([0, 4, 4, 6], dtype=np.int64),  # term 1 is empty
         doc_ids=np.array([0, 2, 4, 6, 1, 3], dtype=np.int32),
     )
-    eng = BooleanEngine.__new__(BooleanEngine)  # skip model training
-    eng.cfg = ServeConfig(postings_store="raw")
-    eng.inv = inv
-    eng._tier2 = None
-    eng._decode_cache = {}
+    eng = _bare_engine(inv, ServeConfig(postings_store="raw"))
     out = eng._verify(np.array([0, 1], dtype=np.int32), np.array([0, 2], dtype=np.int32))
     assert len(out) == 0  # empty term list -> empty conjunction, no crash
     out = eng._verify(np.array([0, 2], dtype=np.int32), np.arange(8, dtype=np.int32))
@@ -209,7 +220,7 @@ def test_verify_empty_postings_regression():
 
 def test_verify_through_hybrid_store():
     from repro.index.build import InvertedIndex
-    from repro.serve.boolean import BooleanEngine, ServeConfig
+    from repro.serve.boolean import ServeConfig
 
     rng = np.random.default_rng(13)
     a = np.sort(rng.choice(500, 200, replace=False)).astype(np.int32)
@@ -220,11 +231,7 @@ def test_verify_through_hybrid_store():
         term_offsets=np.array([0, len(a), len(a) + len(b)], dtype=np.int64),
         doc_ids=np.concatenate([a, b]),
     )
-    eng = BooleanEngine.__new__(BooleanEngine)
-    eng.cfg = ServeConfig(postings_store="hybrid")
-    eng.inv = inv
-    eng._tier2 = None
-    eng._decode_cache = {}
+    eng = _bare_engine(inv, ServeConfig(postings_store="hybrid"))
     got = eng._verify(np.array([0, 1], dtype=np.int32), np.arange(500, dtype=np.int32))
     expect = np.intersect1d(a, b)
     assert np.array_equal(np.sort(got), expect)
