@@ -5,6 +5,8 @@ any regresses beyond the tolerance:
 
   BENCH_learned_postings.json   bits_per_posting per codec    (lower is better)
   BENCH_guided_intersect.json   bytes_ratio, latency_ratio    (lower is better)
+  BENCH_sharded_serve.json      latency_ratio (best sharded vs K=1, machine-
+                                normalized within one run; lower is better)
 
 Storage/bytes metrics are deterministic (seeded corpora), so any movement is
 a real code change.  The latency metric is the guided/full *ratio* measured
@@ -37,6 +39,10 @@ METRICS = [
     ("BENCH_guided_intersect.json", "bytes_ratio", 0.0),
     ("BENCH_guided_intersect.json", "store.bits_per_posting", 0.0),
     ("BENCH_guided_intersect.json", "latency_ratio", 0.5),
+    # shard fan-out overhead (threads, planning, bitmap merge) relative to
+    # the K=1 engine on the same run; the floor absorbs CI-runner thread
+    # scheduling noise, but a sharded engine >2x slower fails anywhere
+    ("BENCH_sharded_serve.json", "latency_ratio", 2.0),
 ]
 
 

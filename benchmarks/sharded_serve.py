@@ -1,0 +1,174 @@
+"""Doc-partitioned sharded serving: qps and probe-bytes vs shard count K.
+
+The serving question behind the ROADMAP's "sharding" item: what does
+splitting the document space into K partitions (serve/shard.py, planned by
+serve/planner.py, fanned out by the BooleanEngine facade) cost or buy on the
+Zipf conjunctive workload?  Each K builds a full engine over the same trained
+learned-Bloom model; K=1 is the unsharded engine and every K must return
+bit-identical `query_batch` results to it (asserted, along with exactness
+against brute force).
+
+The bench also exercises the persistent shard-store round trip
+(index/store.py): the K=4 index is saved, reloaded (mmap-lazy), and must
+serve identical results — with the reload measured against the in-memory
+build that re-runs codec selection.
+
+Emits BENCH_sharded_serve.json:
+  k.<K>.qps / seconds      verified query throughput at K shards
+  k.<K>.probe_bytes        guided-probe + fallback stream bytes touched
+  k.<K>.cache_*            aggregated per-shard decode-cache counters
+  latency_ratio            min over K>1 of seconds(K) / seconds(K=1) —
+                           machine-normalized, gated by check_regression.py
+                           (sharding overhead must never blow up serving)
+  store.load_vs_build      reload seconds / re-encode-build seconds
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+
+import numpy as np
+
+BENCH_PATH = "BENCH_sharded_serve.json"
+
+N_DOCS = 4096
+N_TERMS = 5000
+AVG_DOC_LEN = 60
+N_QUERIES = 48
+TRAIN_STEPS = 120
+REPS = 3  # timing passes per K (min taken; first warms caches/jit)
+K_SWEEP = (1, 2, 4, 8)
+SEED = 17
+
+
+def _system():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common.config import CorpusConfig, LearnedIndexConfig, OptimizerConfig
+    from repro.core import fit_thresholds, init_membership, membership_loss
+    from repro.data.corpus import synthesize_corpus
+    from repro.data.loader import membership_batches
+    from repro.index.build import build_inverted_index
+    from repro.train import init_train_state, make_train_step
+
+    corpus = synthesize_corpus(
+        CorpusConfig(n_docs=N_DOCS, n_terms=N_TERMS, avg_doc_len=AVG_DOC_LEN, seed=SEED)
+    )
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(embed_dim=32, truncation_k=32, block_size=128)
+    params, _ = init_membership(jax.random.key(0), li_cfg, corpus.n_terms, corpus.n_docs)
+    ocfg = OptimizerConfig(lr=0.05, warmup_steps=10, total_steps=TRAIN_STEPS,
+                           weight_decay=0.0)
+    step = jax.jit(make_train_step(lambda p, b: membership_loss(p, b), ocfg))
+    st = init_train_state(params, ocfg)
+    for _, batch in zip(range(TRAIN_STEPS), membership_batches(corpus, batch_size=2048)):
+        params, st, _ = step(params, st, {k: jnp.asarray(v) for k, v in batch.items()})
+    lb = fit_thresholds(params, inv)
+    return corpus, inv, li_cfg, lb
+
+
+def sharded_rows(write_json: bool = True):
+    from repro.data.queries import brute_force_answers, zipf_conjunctions
+    from repro.serve import BooleanEngine, ServeConfig
+
+    corpus, inv, li_cfg, lb = _system()
+    queries = zipf_conjunctions(inv.dfs, N_QUERIES, seed=SEED + 1)
+    exact = brute_force_answers(corpus, queries)
+
+    per_k: dict[str, dict] = {}
+    seconds: dict[int, float] = {}
+    ref_results = None
+    engines: dict[int, "BooleanEngine"] = {}
+    for k in K_SWEEP:
+        t0 = time.time()
+        eng = BooleanEngine(lb, inv, li_cfg, ServeConfig(n_shards=k))
+        # force tier-2 builds out of the timed region (codec selection is
+        # startup cost, amortized or eliminated by the persistent store)
+        for sh in eng.shards:
+            sh.tier2
+        build_s = time.time() - t0
+        engines[k] = eng
+        best = np.inf
+        results = None
+        for _ in range(REPS):
+            t0 = time.time()
+            results = eng.query_batch(queries)
+            best = min(best, time.time() - t0)
+        seconds[k] = best
+        if k == 1:
+            ref_results = results
+            for r, e in zip(results, exact):
+                assert np.array_equal(r, e), "K=1 engine must be exact"
+        else:
+            for r, e in zip(results, ref_results):
+                assert np.array_equal(r, e), f"K={k} differs from K=1 (bit-identity)"
+        eng.reset_stats()
+        eng.query_batch(queries)  # byte accounting for exactly one pass
+        s = eng.serving_stats()["summary"]
+        per_k[str(k)] = {
+            "seconds": best,
+            "qps": N_QUERIES / best,
+            "build_seconds": build_s,
+            "active_shards": len(eng.shards),
+            "probe_bytes": s["probe_bytes"],
+            "bytes_ratio": s["bytes_ratio"],
+            "cache_hits": s["cache_hits"],
+            "cache_misses": s["cache_misses"],
+            "cache_evictions": s["cache_evictions"],
+        }
+
+    # ---- persistent shard-store round trip (K=4): reload beats re-encode
+    with tempfile.TemporaryDirectory() as d:
+        engines[4].save(d)
+        t0 = time.time()
+        loaded = BooleanEngine.from_store(lb, li_cfg, ServeConfig(n_shards=4), d)
+        load_s = time.time() - t0
+        for r, e in zip(loaded.query_batch(queries), ref_results):
+            assert np.array_equal(r, e), "store round trip must serve identical results"
+        t0 = time.time()
+        rebuilt = BooleanEngine(lb, inv, li_cfg, ServeConfig(n_shards=4))
+        for sh in rebuilt.shards:
+            sh.tier2
+        build_s = time.time() - t0
+
+    latency_ratio = min(seconds[k] for k in K_SWEEP if k > 1) / seconds[1]
+    traj = {
+        "workload": {
+            "n_docs": N_DOCS,
+            "n_terms": N_TERMS,
+            "n_postings": int(inv.n_postings),
+            "n_queries": N_QUERIES,
+            "train_steps": TRAIN_STEPS,
+        },
+        "k": per_k,
+        # machine-normalized gate metric: the best sharded configuration's
+        # serving time relative to K=1 on the same run — fan-out overhead
+        # (threads, planning, merge) must never blow up serving latency
+        "latency_ratio": latency_ratio,
+        "store": {
+            "load_seconds": load_s,
+            "build_seconds": build_s,
+            "load_vs_build": load_s / build_s,
+            "roundtrip_exact": True,
+        },
+    }
+    rows = [
+        (f"sharded/k{k}", 1e6 * per_k[str(k)]["seconds"] / N_QUERIES,
+         f"qps={per_k[str(k)]['qps']:.1f}_probe_bytes={per_k[str(k)]['probe_bytes']}")
+        for k in K_SWEEP
+    ]
+    rows.append(("sharded/latency_ratio", 0.0, f"best_k_vs_k1={latency_ratio:.3f}"))
+    rows.append(("sharded/store_load", 1e6 * load_s,
+                 f"load_vs_build={traj['store']['load_vs_build']:.3f}"))
+    if write_json:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(traj, f, indent=2)
+        rows.append(("sharded/json", 0.0, f"wrote {BENCH_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in sharded_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -42,6 +42,21 @@ DEFAULT_RULES: dict[str, Any] = {
 }
 
 
+def abstract_mesh(shape: Sequence[int], names: Sequence[str]):
+    """Version-portable AbstractMesh((16, 16), ("data", "model")) constructor.
+
+    Current JAX (0.4.36+) takes (name, size) pairs in one shape_tuple;
+    later releases moved to split (axis_sizes, axis_names) positionals.
+    Tests and dry-run cells use this so either signature works.
+    """
+    if len(shape) != len(names):
+        raise ValueError(f"shape {shape} and names {names} must align")
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(names))
+
+
 def _mesh_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(mesh.axis_names)
 

@@ -51,6 +51,30 @@ def build_inverted_index(corpus: Corpus) -> InvertedIndex:
     )
 
 
+def slice_index(inv: InvertedIndex, lo: int, hi: int) -> InvertedIndex:
+    """Doc-range restriction of the index: postings in [lo, hi), ids rebased.
+
+    The document-partitioned serving layer's builder: shard s owns global doc
+    ids [lo, hi) and serves them as local ids 0..hi-lo-1.  Per-term order is
+    preserved (postings are sorted by doc id, so a contiguous range selects a
+    contiguous run of each list).  O(P) vectorized; lo=0, hi=n_docs is the
+    identity (modulo array copies).
+    """
+    if not 0 <= lo <= hi <= inv.n_docs:
+        raise ValueError(f"bad doc range [{lo}, {hi}) for {inv.n_docs} docs")
+    sel = (inv.doc_ids >= lo) & (inv.doc_ids < hi)
+    term_of = np.repeat(np.arange(inv.n_terms, dtype=np.int64), inv.dfs)
+    counts = np.bincount(term_of[sel], minlength=inv.n_terms)
+    offsets = np.zeros(inv.n_terms + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return InvertedIndex(
+        n_docs=hi - lo,
+        n_terms=inv.n_terms,
+        term_offsets=offsets,
+        doc_ids=(inv.doc_ids[sel] - lo).astype(np.int32),
+    )
+
+
 def truncate_index(inv: InvertedIndex, k: int) -> InvertedIndex:
     """Tier-1 index: every posting list truncated to its first k entries.
 

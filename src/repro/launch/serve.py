@@ -4,7 +4,13 @@ Builds a synthetic collection, trains the membership model briefly, fits
 zero-FN thresholds, and serves batched conjunctive queries with the chosen
 algorithm. --verified re-checks against tier-2 for exact results.
 
+--shards K serves through K document partitions (planner/executor fan-out);
+--index-dir DIR persists the sharded index (index/store.py) and then serves
+from the reloaded store — the build-then-serve round trip that proves a
+restart needs no re-encoding.
+
   PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --index-dir /tmp/idx
 """
 from __future__ import annotations
 
@@ -57,6 +63,11 @@ def main():
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--no-verify", action="store_true")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="document partitions served by the planner/executor")
+    ap.add_argument("--index-dir", default=None,
+                    help="persist the sharded index here, then serve from the "
+                         "reloaded store (build-then-serve round trip)")
     args = ap.parse_args()
 
     corpus = synthesize_corpus(
@@ -68,11 +79,18 @@ def main():
     )
     params = train_membership(corpus, inv, li_cfg, steps=args.train_steps)
     lb = fit_thresholds(params, inv)
-    eng = BooleanEngine(
-        lb, inv, li_cfg,
-        ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
-                    use_kernel=args.use_kernel),
-    )
+    cfg = ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
+                      use_kernel=args.use_kernel, n_shards=args.shards)
+    eng = BooleanEngine(lb, inv, li_cfg, cfg)
+    if args.index_dir:
+        t0 = time.time()
+        eng.save(args.index_dir)
+        save_s = time.time() - t0
+        t0 = time.time()
+        eng = BooleanEngine.from_store(lb, li_cfg, cfg, args.index_dir)
+        print(f"[serve] index saved to {args.index_dir} in {save_s:.2f}s, "
+              f"reloaded in {time.time() - t0:.2f}s — serving from the store")
+    print(f"[serve] {len(eng.shards)} active shard(s), ranges {eng._ranges}")
     print("[serve] memory report (bits):", eng.memory_report())
 
     q = sample_queries(corpus, args.queries, seed=3)
@@ -87,6 +105,10 @@ def main():
     if not args.no_verify:
         assert n_exact == args.queries, "verified mode must be exact"
         print("[serve] verified mode: all results exact ✓")
+    s = eng.serving_stats()["summary"]
+    print(f"[serve] summary: {s['n_shards']} shards, cache "
+          f"{s['cache_hits']}h/{s['cache_misses']}m/{s['cache_evictions']}e, "
+          f"probe bytes {s['probe_bytes']} (ratio {s['bytes_ratio']:.3f})")
 
 
 if __name__ == "__main__":

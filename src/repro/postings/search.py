@@ -258,8 +258,17 @@ class GuidedPostings:
         return self.term_model(t) is not None
 
     # ------------------------------------------------------------- probes
-    def _route(self, t: int, n_cands: int) -> tuple[str, TermModel | None]:
-        """Shared probe preamble: stats + 'empty'|'fallback'|'guided' routing."""
+    def _route(
+        self, t: int, n_cands: int, hint: str | None = None
+    ) -> tuple[str, TermModel | None]:
+        """Shared probe preamble: stats + 'empty'|'fallback'|'guided' routing.
+
+        ``hint`` is a planner override ('guided' | 'decode'): the sharded
+        planner runs the same cost model at plan time with its candidate
+        estimate, so the executor honors its decision instead of re-deciding
+        per probe.  A hint never forces a guided probe on a classical-codec
+        term — absence of a TermModel always falls back.
+        """
         self.stats.probes += n_cands
         if int(self.store.lens[t]) == 0:
             return "empty", None
@@ -268,7 +277,7 @@ class GuidedPostings:
         if tm is None:
             self.stats.fallback_terms += 1
             return "fallback", None
-        if n_cands * tm.avg_window >= tm.n:
+        if hint == "decode" or (hint is None and n_cands * tm.avg_window >= tm.n):
             # cost model: the ε-windows of this many probes would decode more
             # correction bytes than the whole list — full decode is cheaper
             self.stats.routed_terms += 1
@@ -294,14 +303,16 @@ class GuidedPostings:
             return found, rank
         return self._probe_host(tm, cands)
 
-    def probe(self, t: int, cands: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def probe(
+        self, t: int, cands: np.ndarray, *, route: str | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
         """-> (contains bool mask, rank int64) for every candidate.
 
         rank(d) = #postings of t strictly below d (searchsorted-left), exact
         whether or not d is present.
         """
         cands = np.asarray(cands)
-        route, tm = self._route(t, len(cands))
+        route, tm = self._route(t, len(cands), route)
         if route == "empty":
             return np.zeros(len(cands), bool), np.zeros(len(cands), np.int64)
         if route == "fallback":
@@ -325,12 +336,14 @@ class GuidedPostings:
         rank = r_lo + np.bincount(probe_of, weights=lt, minlength=len(d)).astype(np.int64)
         return found, rank
 
-    def contains(self, t: int, cands: np.ndarray) -> np.ndarray:
+    def contains(
+        self, t: int, cands: np.ndarray, *, route: str | None = None
+    ) -> np.ndarray:
         """Membership mask for *sorted ascending* candidates (the shape the
         verification loop produces).  Fallback terms skip rank computation
         and gallop instead of binary-searching every candidate."""
         cands = np.asarray(cands)
-        route, tm = self._route(t, len(cands))
+        route, tm = self._route(t, len(cands), route)
         if route == "empty":
             return np.zeros(len(cands), bool)
         if route == "fallback":

@@ -1,3 +1,15 @@
 from repro.serve.boolean import BooleanEngine, ServeConfig
+from repro.serve.planner import BatchPlan, QueryPlan, ShardPlan, plan_batch
+from repro.serve.shard import ShardEngine, shard_ranges, slice_bloom
 
-__all__ = ["BooleanEngine", "ServeConfig"]
+__all__ = [
+    "BatchPlan",
+    "BooleanEngine",
+    "QueryPlan",
+    "ServeConfig",
+    "ShardEngine",
+    "ShardPlan",
+    "plan_batch",
+    "shard_ranges",
+    "slice_bloom",
+]

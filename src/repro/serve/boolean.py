@@ -1,39 +1,40 @@
-"""Batched Boolean-query serving engine — the paper's system, deployable form.
+"""Batched Boolean-query serving engine — doc-partitioned planner/executor.
 
-Pipeline per batch of queries (pad-to-bucket batching):
-  1. algorithm from LearnedIndexConfig: exhaustive | two_tier | block;
-  2. learned-Bloom scoring (zero false negatives) produces candidate masks;
-  3. optional `verified` mode re-checks candidates against the exact tier-2
-     postings (the paper's fallback structure) -> exact conjunctive results.
-     Verification is *model-guided*: terms are visited smallest-list-first,
-     and learned-codec terms answer contains() probes straight from PLM/RMI
-     stream metadata (predict rank, decode only the ±ε correction window —
-     repro.postings.search), so the hot path reads ε-window bytes instead of
-     whole compressed lists.  Classical-codec terms fall back to full decode
-     through a decode-cost-budgeted LRU cache, membership via galloping
-     search (index/intersect.py);
-  4. results returned as packed bitmaps (32x cheaper to move than id lists)
-     plus materialized doc ids per query.
+The paper's system in deployable form, refactored into three layers:
 
-The Pallas membership kernel (kernels/membership) is used for the doc-scan
-algorithms when `use_kernel=True`; the guided-probe batches can run on the
-kernels/guided_search Pallas kernel with `guided_kernel=True` (pure
-numpy/jnp paths are the references).
+  1. **plan** (serve/planner.py) — a query batch becomes per-shard probe
+     plans: smallest-global-df term ordering, per-shard run masks (a shard
+     skips conjunctions provably empty on its partition), and cost-model
+     routes pinning each learned-codec term to guided ε-window probes or
+     full decode;
+  2. **execute** (serve/shard.py) — K document-partitioned ShardEngines,
+     each owning its learned-Bloom slice, guided-probe TermModels and
+     decode-cost-budgeted CostLRU, serve their plan (one candidate-mask
+     dispatch + one guided probe batch per shard; probe phases fan out on a
+     thread pool when ServeConfig.shard_workers asks for it) and return
+     packed result bitmaps over local doc ids;
+  3. **merge** — shard bitmaps word-copy into the global bitmap at their
+     doc-id offset (shard boundaries are 32-aligned), then materialize to
+     per-query sorted doc-id arrays.
+
+``BooleanEngine`` is the thin facade over all three.  K=1 reproduces the
+unsharded engine bit-for-bit; engines can also start from the persistent
+shard-store (index/store.py) via ``from_store`` — no re-encoding, stream
+bytes page in lazily via mmap.
 """
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import LearnedIndexConfig
-from repro.core import algorithms as alg
 from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex
-from repro.index.intersect import gallop_membership
-from repro.kernels.membership.ops import score_terms_bitmask
-from repro.serve.cache import CostLRU
+from repro.postings.search import ProbeStats
+from repro.serve.planner import BatchPlan, plan_batch
+from repro.serve.shard import WORD_BITS, ShardEngine, shard_ranges, slice_bloom, unpack_row
 
 
 @dataclass
@@ -45,142 +46,239 @@ class ServeConfig:
     postings_store: str = "hybrid"  # tier-2 backing: "hybrid" (compressed) | "raw"
     use_guided: bool = True  # model-guided contains() probes for learned terms
     guided_kernel: bool = False  # batch probes on the Pallas guided_search kernel
-    cache_budget_bytes: int = 32 << 20  # decode-cost budget of the tier-2 LRU
+    cache_budget_bytes: int = 32 << 20  # decode-cost budget of each shard's LRU
+    n_shards: int = 1  # document partitions (contiguous, 32-aligned ranges)
+    # thread-pool workers for the per-shard probe/verify phase; 0 = fan out
+    # serially on the calling thread.  The probe phase is many small numpy
+    # ops, so on GIL-ed CPython threads convoy (measured ~8x slower at K=4);
+    # raise this on free-threaded builds or guided_kernel workloads where
+    # per-shard probe batches release the GIL for real work.
+    shard_workers: int = 0
 
 
 class BooleanEngine:
+    """Facade: plans a batch, fans it out across shards, merges bitmaps."""
+
     def __init__(
         self,
         lb: LearnedBloom,
-        inv: InvertedIndex,
+        inv: InvertedIndex | None,
         li_cfg: LearnedIndexConfig,
         cfg: ServeConfig | None = None,
+        *,
+        shards: list[tuple[tuple[int, int], ShardEngine | None]] | None = None,
     ):
         self.cfg = cfg or ServeConfig()
-        self.inv = inv
         self.lb = lb
-        self._tier2 = None  # lazy HybridPostings (built on first verification)
-        self._guided = None  # lazy GuidedPostings over tier-2
-        self._dfs = inv.dfs  # materialized once; _verify sorts terms by df per query
-        self._decode_cache: CostLRU[int, np.ndarray] = CostLRU(self.cfg.cache_budget_bytes)
-        self.state = alg.build_engine(
-            lb.params, lb.tau, inv,
-            truncation_k=li_cfg.truncation_k, block_size=li_cfg.block_size,
+        self.inv = inv
+        self.li_cfg = li_cfg
+        self.n_docs = lb.n_docs
+        if shards is None:
+            if inv is None:
+                raise ValueError("need an InvertedIndex (or prebuilt shards)")
+            shards = [
+                (
+                    (lo, hi),
+                    ShardEngine.from_range(lb, inv, li_cfg, self.cfg, lo, hi)
+                    if hi > lo else None,
+                )
+                for lo, hi in shard_ranges(inv.n_docs, self.cfg.n_shards)
+            ]
+        self._ranges = [r for r, _ in shards]
+        self._shards = [s for _, s in shards]
+        active = self.shards
+        if inv is not None:
+            self._global_dfs = inv.dfs
+        else:
+            self._global_dfs = sum((s.local_dfs for s in active), start=0)
+        self._pool = (
+            ThreadPoolExecutor(
+                max_workers=min(self.cfg.shard_workers, len(active)),
+                thread_name_prefix="shard",
+            )
+            if len(active) > 1 and self.cfg.shard_workers > 1 else None
         )
+
+    @classmethod
+    def from_store(
+        cls,
+        lb: LearnedBloom,
+        li_cfg: LearnedIndexConfig,
+        cfg: ServeConfig | None,
+        index_dir: str,
+        *,
+        mmap: bool = True,
+    ) -> "BooleanEngine":
+        """Start from a persistent shard-store: no re-encoding, lazy streams."""
+        from repro.index.store import load_sharded
+
+        cfg = cfg or ServeConfig()
+        n_docs, entries = load_sharded(index_dir, mmap=mmap)
+        if n_docs != lb.n_docs:
+            raise ValueError(f"store has {n_docs} docs, model {lb.n_docs}")
+        shards = [
+            (
+                (lo, hi),
+                ShardEngine(
+                    slice_bloom(lb, lo, hi), inv, li_cfg, cfg,
+                    lo=lo, hi=hi, tier2=store,
+                )
+                if inv is not None else None,
+            )
+            for (lo, hi), inv, store in entries
+        ]
+        return cls(lb, None, li_cfg, cfg, shards=shards)
+
+    def save(self, index_dir: str) -> None:
+        """Persist every shard's index + compressed store (build-then-serve).
+
+        Forces tier-2 builds (hybrid codec selection) so the saved layout is
+        complete; a reloaded engine never re-encodes.
+        """
+        from repro.index.store import save_sharded
+
+        if self.cfg.postings_store != "hybrid":
+            raise ValueError("only the hybrid postings store is persistable")
+        entries = [
+            ((lo, hi), sh.inv if sh else None, sh.tier2 if sh else None)
+            for (lo, hi), sh in zip(self._ranges, self._shards)
+        ]
+        save_sharded(index_dir, self.n_docs, entries)
+
+    # ------------------------------------------------------------- shards
+    @property
+    def shards(self) -> list[ShardEngine]:
+        """Non-empty shard executors, ascending doc range."""
+        return [s for s in self._shards if s is not None]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._ranges)
 
     @property
     def tier2(self):
-        """Compressed tier-2 postings store (hybrid per-term codec choice)."""
-        if self._tier2 is None and self.cfg.postings_store == "hybrid":
-            from repro.postings import HybridPostings
-
-            self._tier2 = HybridPostings.from_index(self.inv)
-        return self._tier2
-
-    @property
-    def guided(self):
-        """Model-guided prober over tier-2 (None when serving raw postings)."""
-        if self._guided is None:
-            store = self.tier2
-            if store is not None and self.cfg.use_guided:
-                from repro.postings import GuidedPostings
-
-                self._guided = GuidedPostings(
-                    store, fallback=self._postings, use_kernel=self.cfg.guided_kernel
-                )
-        return self._guided
-
-    def _postings(self, t: int) -> np.ndarray:
-        """Fully-decoded postings of term t, via the cost-budgeted LRU."""
-        store = self.tier2
-        if store is None:
-            return self.inv.postings(t)
-        hit = self._decode_cache.get(t)
-        if hit is None:
-            hit = store.postings(t)
-            self._decode_cache.put(t, hit, hit.nbytes)
-        return hit
+        """K=1 convenience: the single shard's compressed tier-2 store."""
+        active = self.shards
+        return active[0].tier2 if len(active) == 1 else None
 
     # ------------------------------------------------------------- query
     def query_batch(self, queries: np.ndarray) -> list[np.ndarray]:
         """(Q, T) padded term ids -> list of result doc-id arrays."""
+        q = self._padded(queries)
+        if q.shape[0] == 0:
+            return []
+        if (q < 0).all():  # all-padding batch: empty without touching a probe
+            return [np.zeros(0, np.int32) for _ in range(q.shape[0])]
+        bitmap = self._execute(q)
+        return [unpack_row(bitmap[i], self.n_docs) for i in range(q.shape[0])]
+
+    def query_batch_bitmap(self, queries: np.ndarray) -> np.ndarray:
+        """(Q, T) padded term ids -> (Q, ceil(n_docs/32)) packed uint32 bitmap."""
+        q = self._padded(queries)
+        words = (self.n_docs + WORD_BITS - 1) // WORD_BITS
+        if q.shape[0] == 0 or (q < 0).all():
+            return np.zeros((q.shape[0], words), dtype=np.uint32)
+        return self._execute(q)
+
+    def _padded(self, queries: np.ndarray) -> np.ndarray:
         q = np.asarray(queries, dtype=np.int32)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (Q, T), got shape {q.shape}")
         if q.shape[1] < self.cfg.max_query_terms:
             q = np.pad(q, ((0, 0), (0, self.cfg.max_query_terms - q.shape[1])),
                        constant_values=-1)
-        if self.cfg.use_kernel and self.cfg.algorithm == "exhaustive":
-            mask = self._kernel_exhaustive(q)
-        else:
-            mask = alg.run_queries(self.state, q, self.cfg.algorithm)
-        results = []
-        for i in range(q.shape[0]):
-            ids = np.nonzero(mask[i])[0].astype(np.int32)
-            if self.cfg.verified:
-                ids = self._verify(q[i], ids)
-            results.append(ids)
-        return results
+        return q
 
-    def _kernel_exhaustive(self, q: np.ndarray) -> np.ndarray:
-        """Pallas path: per-term packed bitmasks, AND-combined per query."""
-        valid = q >= 0
-        flat_terms = jnp.asarray(np.maximum(q, 0).reshape(-1))
-        bm = score_terms_bitmask(self.state.params, flat_terms, self.state.tau)
-        bm = np.array(bm).reshape(q.shape[0], q.shape[1], -1)  # writable copy
-        full = np.uint32(0xFFFFFFFF)
-        bm[~valid] = full
-        anded = bm[:, 0]
-        for t in range(1, q.shape[1]):
-            anded = anded & bm[:, t]
-        # unpack to bool (D,)
-        bits = np.unpackbits(
-            anded.view(np.uint8), axis=-1, bitorder="little"
-        )[:, : self.state.n_docs].astype(bool)
-        bits[~valid.any(axis=1)] = False
-        return bits
+    def _execute(self, q: np.ndarray) -> np.ndarray:
+        """Plan, fan out across shards, merge packed bitmaps by doc offset.
 
-    def _verify(self, query: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        """Exact candidate re-check against tier-2, smallest list first.
-
-        Visiting terms in ascending document frequency shrinks the candidate
-        set fastest; each term then filters the (sorted) survivors either by
-        guided ε-window probes (learned-codec terms) or by galloping search
-        over the fully-decoded list (classical codecs / raw store).
+        Two phases per the executor contract: learned-Bloom candidate masks
+        are one jit dispatch per shard, issued serially (concurrent dispatch
+        contends on the device client); the probe/verify phase — guided
+        ε-window probes and cache decodes, pure numpy — fans out across
+        shards, on the thread pool when cfg.shard_workers > 1 (see the
+        ServeConfig note on the GIL) and on the calling thread otherwise.
         """
-        out = ids
-        terms = sorted({int(t) for t in query if t >= 0})  # dedupe repeats
-        if not terms or len(out) == 0:
-            return out
-        dfs = self._dfs
-        terms.sort(key=lambda t: int(dfs[t]))
-        if int(dfs[terms[0]]) == 0:  # some term occurs nowhere: empty AND
-            return out[:0]
-        guided = self.guided
-        for t in terms:
-            if len(out) == 0:
-                break
-            if guided is not None:
-                out = out[guided.contains(t, out)]
-            else:
-                out = out[gallop_membership(self._postings(t), out)]
+        active = self.shards
+        plan = plan_batch(q, self._global_dfs, active, verified=self.cfg.verified)
+        masks = [
+            sh.candidate_mask(q) if (sh.n_docs > 0 and sp.run.any()) else None
+            for sh, sp in zip(active, plan.shard_plans)
+        ]
+        if self._pool is None:
+            parts = [sh.execute(q, sp, plan.qplans, mask=m)
+                     for sh, sp, m in zip(active, plan.shard_plans, masks)]
+        else:
+            futs = [self._pool.submit(sh.execute, q, sp, plan.qplans, mask=m)
+                    for sh, sp, m in zip(active, plan.shard_plans, masks)]
+            parts = [f.result() for f in futs]
+        return self._merge(parts, active)
+
+    def _merge(self, parts: list[np.ndarray], active: list[ShardEngine]) -> np.ndarray:
+        """Word-copy each shard's packed bitmap at its doc-id offset (shard
+        boundaries are 32-aligned, so no cross-shard bit arithmetic)."""
+        n_queries = parts[0].shape[0] if parts else 0
+        out = np.zeros((n_queries, (self.n_docs + WORD_BITS - 1) // WORD_BITS), np.uint32)
+        for sh, bm in zip(active, parts):
+            off = sh.lo // WORD_BITS
+            out[:, off : off + bm.shape[1]] = bm
         return out
 
     # ------------------------------------------------------------- stats
     def memory_report(self) -> dict[str, int]:
-        """Bits used by each component (feeds the Eq.(2) comparison)."""
-        s = self.state
+        """Bits used by each component (feeds the Eq.(2) comparison);
+        dense-state and tier-2 bits summed over shards."""
         report = {
             "model_bits": self.lb.size_bits(),
-            "tier1_bits": int(s.tier1.size * 32),
-            "block_bitmap_bits": int(s.block_bitmaps.size * 32),
+            "tier1_bits": 0,
+            "block_bitmap_bits": 0,
             "backup_bits": int(self.lb.backup_keys.size * 64),
         }
-        if self._tier2 is not None:
-            report["tier2_bits"] = self._tier2.size_bits()
+        tier2_bits = None
+        for sh in self.shards:
+            bits = sh.memory_bits()
+            report["tier1_bits"] += bits["tier1_bits"]
+            report["block_bitmap_bits"] += bits["block_bitmap_bits"]
+            if "tier2_bits" in bits:
+                tier2_bits = (tier2_bits or 0) + bits["tier2_bits"]
+        if tier2_bits is not None:
+            report["tier2_bits"] = tier2_bits
         return report
 
     def serving_stats(self) -> dict[str, dict]:
-        """Hot-path accounting: decode-cache behaviour + guided-probe bytes."""
-        stats: dict[str, dict] = {"decode_cache": self._decode_cache.stats()}
-        if self._guided is not None:
-            stats["guided"] = self._guided.stats.as_dict()
+        """Per-shard hot-path accounting plus aggregated top-level counters.
+
+        'decode_cache' and 'guided' keep the single-engine shapes (counters
+        summed across shards, ratios recomputed); 'summary' is the one-number
+        view benchmarks report; 'shards' carries the raw per-shard stats.
+        """
+        per_shard = [sh.serving_stats() for sh in self.shards]
+        cache_keys = ("entries", "cost_bytes", "budget_bytes", "hits", "misses", "evictions")
+        cache = {k: sum(s["decode_cache"][k] for s in per_shard) for k in cache_keys}
+        stats: dict[str, dict] = {"decode_cache": cache, "shards": per_shard}
+        guided = [s["guided"] for s in per_shard if "guided" in s]
+        if guided:
+            agg = ProbeStats(**{
+                f: sum(int(g[f]) for g in guided)
+                for f in ("probes", "guided_terms", "fallback_terms", "routed_terms",
+                          "window_bytes", "metadata_bytes", "fallback_bytes",
+                          "full_equiv_bytes")
+            })
+            stats["guided"] = agg.as_dict()
+        stats["summary"] = {
+            "n_shards": len(self.shards),
+            "cache_hits": cache["hits"],
+            "cache_misses": cache["misses"],
+            "cache_evictions": cache["evictions"],
+            "probe_bytes": stats["guided"]["guided_bytes"] if guided else 0,
+            "bytes_ratio": stats["guided"]["bytes_ratio"] if guided else 0.0,
+        }
         return stats
+
+    def reset_stats(self) -> None:
+        """Zero every shard's probe + cache accounting window (cached decodes
+        stay resident, so the next pass measures warm serving)."""
+        for sh in self.shards:
+            if sh._guided is not None:
+                sh._guided.reset_stats()
+            sh._decode_cache.reset_counters()

@@ -57,6 +57,10 @@ class CostLRU(Generic[K, V]):
             self.total_cost -= c
             self.evictions += 1
 
+    def reset_counters(self) -> None:
+        """Zero the hit/miss/eviction window; cached entries stay resident."""
+        self.hits = self.misses = self.evictions = 0
+
     def stats(self) -> dict[str, int]:
         return {
             "entries": len(self._entries),

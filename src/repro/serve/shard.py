@@ -1,0 +1,305 @@
+"""Doc-partitioned shard executor: one shard of the Boolean serving engine.
+
+``ShardEngine`` owns everything one document partition needs to serve its
+slice of a query batch end to end:
+
+  * a learned-Bloom slice (doc-embedding rows [lo, hi) of the global model +
+    the global per-term zero-FN thresholds — a min over a superset of each
+    shard's positives, so the zero-false-negative guarantee survives
+    partitioning) and the dense EngineState built from it;
+  * a local compressed tier-2 store (HybridPostings over local doc ids,
+    built lazily or preloaded from the persistent shard-store);
+  * its own guided-probe ``TermModel``s (GuidedPostings) and decode-cost
+    budgeted ``CostLRU``, with per-shard ``serving_stats()``.
+
+``execute`` consumes the planner's ShardPlan (run mask + probe routes) and
+returns its results as a *packed bitmap* over local doc ids — 32x cheaper to
+move to the merging facade than id lists, and word-copyable into the global
+bitmap because shard boundaries are aligned to 32-doc words
+(``shard_ranges``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.common.config import LearnedIndexConfig
+from repro.core import algorithms as alg
+from repro.core.learned_bloom import LearnedBloom
+from repro.index.build import InvertedIndex, slice_index
+from repro.index.intersect import gallop_membership
+from repro.serve.cache import CostLRU
+from repro.serve.planner import QueryPlan, ShardPlan
+
+WORD_BITS = 32  # packed-bitmap word width; shard boundaries align to this
+
+
+def shard_ranges(n_docs: int, k: int, *, align: int = WORD_BITS) -> list[tuple[int, int]]:
+    """K contiguous doc-id ranges covering [0, n_docs), boundaries aligned.
+
+    Alignment to 32-doc words lets per-shard packed result bitmaps merge into
+    the global bitmap by pure word copy (no cross-shard bit shifting).  Small
+    collections can yield empty ranges (lo == hi) — the facade skips them.
+    """
+    if k <= 0:
+        raise ValueError(f"need k >= 1 shards, got {k}")
+    cuts = [0]
+    for i in range(1, k):
+        c = int(round(i * n_docs / k / align)) * align
+        cuts.append(min(max(c, cuts[-1]), n_docs))
+    cuts.append(n_docs)
+    return [(cuts[i], cuts[i + 1]) for i in range(k)]
+
+
+def slice_bloom(lb: LearnedBloom, lo: int, hi: int) -> LearnedBloom:
+    """Learned-Bloom restriction to docs [lo, hi), rebased to local ids.
+
+    Slices the doc-embedding table rows (term table, MLP head and τ are
+    shared — τ_t fitted over *all* positives lower-bounds the shard's, so
+    zero-FN holds locally) and remaps spilled backup keys into the local
+    t*n_local + d encoding.
+    """
+    params = dict(lb.params)
+    doc_embed = dict(params["doc_embed"])
+    doc_embed["table"] = params["doc_embed"]["table"][lo:hi]
+    params["doc_embed"] = doc_embed
+    n_local = hi - lo
+    keys = lb.backup_keys
+    if len(keys):
+        t, d = keys // lb.n_docs, keys % lb.n_docs
+        sel = (d >= lo) & (d < hi)
+        keys = t[sel] * np.int64(n_local) + (d[sel] - lo)  # stays sorted
+    return LearnedBloom(params=params, tau=lb.tau, backup_keys=keys, n_docs=n_local)
+
+
+def pack_ids(ids: np.ndarray, n_docs: int) -> np.ndarray:
+    """Sorted unique doc ids -> packed uint32 bitmap (bit d%32 of word d//32)."""
+    out = np.zeros((n_docs + WORD_BITS - 1) // WORD_BITS, dtype=np.uint32)
+    if len(ids):
+        ids = np.asarray(ids, np.int64)
+        np.bitwise_or.at(out, ids // WORD_BITS, np.uint32(1) << (ids % WORD_BITS).astype(np.uint32))
+    return out
+
+
+def unpack_row(words: np.ndarray, n_docs: int) -> np.ndarray:
+    """Packed uint32 bitmap row -> sorted int32 doc ids (inverse of pack_ids)."""
+    bits = np.unpackbits(
+        np.ascontiguousarray(words).view(np.uint8), bitorder="little"
+    )[:n_docs]
+    return np.nonzero(bits)[0].astype(np.int32)
+
+
+class ShardEngine:
+    """Executor for one document partition (the former BooleanEngine core)."""
+
+    def __init__(
+        self,
+        lb: LearnedBloom,
+        inv: InvertedIndex,
+        li_cfg: LearnedIndexConfig,
+        cfg,  # ServeConfig (typed loosely to avoid a circular import)
+        *,
+        lo: int = 0,
+        hi: int | None = None,
+        tier2=None,  # preloaded HybridPostings (the persistent shard-store)
+    ):
+        self.cfg = cfg
+        self.inv = inv
+        self.lb = lb
+        self.lo = lo
+        self.hi = inv.n_docs if hi is None else hi
+        self._tier2 = tier2 if cfg.postings_store == "hybrid" else None
+        self._guided = None  # lazy GuidedPostings over tier-2
+        self._dfs = inv.dfs  # local document frequencies, materialized once
+        self._decode_cache: CostLRU[int, np.ndarray] = CostLRU(cfg.cache_budget_bytes)
+        self.state = alg.build_engine(
+            lb.params, lb.tau, inv,
+            truncation_k=li_cfg.truncation_k, block_size=li_cfg.block_size,
+        )
+
+    @classmethod
+    def from_range(cls, lb, inv, li_cfg, cfg, lo: int, hi: int, tier2=None) -> "ShardEngine":
+        """Build the shard by slicing a global model + index to [lo, hi)."""
+        return cls(
+            slice_bloom(lb, lo, hi), slice_index(inv, lo, hi), li_cfg, cfg,
+            lo=lo, hi=hi, tier2=tier2,
+        )
+
+    # ------------------------------------------------------------- stores
+    @property
+    def n_docs(self) -> int:
+        return self.inv.n_docs
+
+    @property
+    def local_dfs(self) -> np.ndarray:
+        """Per-term local document frequencies (the planner's run/est input)."""
+        return self._dfs
+
+    @property
+    def tier2(self):
+        """Compressed tier-2 postings store (hybrid per-term codec choice)."""
+        if self._tier2 is None and self.cfg.postings_store == "hybrid":
+            from repro.postings import HybridPostings
+
+            self._tier2 = HybridPostings.from_index(self.inv)
+        return self._tier2
+
+    @property
+    def guided(self):
+        """Model-guided prober over tier-2 (None when serving raw postings)."""
+        if self._guided is None:
+            store = self.tier2
+            if store is not None and self.cfg.use_guided:
+                from repro.postings import GuidedPostings
+
+                self._guided = GuidedPostings(
+                    store, fallback=self._postings, use_kernel=self.cfg.guided_kernel
+                )
+        return self._guided
+
+    def _postings(self, t: int) -> np.ndarray:
+        """Fully-decoded postings of term t, via the cost-budgeted LRU."""
+        store = self.tier2
+        if store is None:
+            return self.inv.postings(t)
+        hit = self._decode_cache.get(t)
+        if hit is None:
+            hit = store.postings(t)
+            self._decode_cache.put(t, hit, hit.nbytes)
+        return hit
+
+    # ------------------------------------------------------------- planning
+    def route_term(self, t: int, est_cands: int) -> str | None:
+        """Cost-model route for term t at the planner's candidate estimate:
+        'guided' | 'decode' for learned-codec terms, None when no model
+        applies (classical codec, raw store, or guided probing disabled)."""
+        g = self.guided
+        if g is None:
+            return None
+        tm = g.term_model(t)
+        if tm is None:
+            return None
+        return "guided" if est_cands * tm.avg_window < tm.n else "decode"
+
+    # ------------------------------------------------------------- execute
+    def candidate_mask(self, q: np.ndarray) -> np.ndarray:
+        """(Q, T) padded terms -> (Q, n_docs) bool learned-Bloom candidates."""
+        if self.cfg.use_kernel and self.cfg.algorithm == "exhaustive":
+            return self._kernel_exhaustive(q)
+        return alg.run_queries(self.state, q, self.cfg.algorithm)
+
+    def execute(
+        self,
+        q: np.ndarray,
+        plan: ShardPlan | None = None,
+        qplans: list[QueryPlan] | None = None,
+        mask: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Serve the batch's slice on this shard -> (Q, words) packed bitmap
+        over local doc ids.  Honors the planner's run mask and probe routes
+        when given; without a plan every query runs with local term order.
+
+        ``mask`` lets the facade precompute the learned-Bloom candidates:
+        model scoring is one jit dispatch per shard and contends badly when
+        issued from concurrent threads, so the facade runs that phase
+        serially and fans out only this (numpy probe) phase to its pool.
+        """
+        n_queries = q.shape[0]
+        words = (self.n_docs + WORD_BITS - 1) // WORD_BITS
+        out = np.zeros((n_queries, words), dtype=np.uint32)
+        run = plan.run if plan is not None else None
+        if self.n_docs == 0 or (run is not None and not run.any()):
+            return out
+        if mask is None:
+            mask = self.candidate_mask(q)
+        for i in range(n_queries):
+            if run is not None and not run[i]:
+                continue
+            ids = np.nonzero(mask[i])[0].astype(np.int32)
+            if self.cfg.verified:
+                if qplans is not None:
+                    routes = plan.routes[i] if plan is not None else None
+                    ids = self._verify_terms(qplans[i].terms, ids, routes)
+                else:
+                    ids = self._verify(q[i], ids)
+            out[i] = pack_ids(ids, self.n_docs)
+        return out
+
+    def _kernel_exhaustive(self, q: np.ndarray) -> np.ndarray:
+        """Pallas path: per-term packed bitmasks, AND-combined per query."""
+        import jax.numpy as jnp
+
+        from repro.kernels.membership.ops import score_terms_bitmask
+
+        valid = q >= 0
+        flat_terms = jnp.asarray(np.maximum(q, 0).reshape(-1))
+        bm = score_terms_bitmask(self.state.params, flat_terms, self.state.tau)
+        bm = np.array(bm).reshape(q.shape[0], q.shape[1], -1)  # writable copy
+        full = np.uint32(0xFFFFFFFF)
+        bm[~valid] = full
+        anded = bm[:, 0]
+        for t in range(1, q.shape[1]):
+            anded = anded & bm[:, t]
+        # unpack to bool (D,)
+        bits = np.unpackbits(
+            anded.view(np.uint8), axis=-1, bitorder="little"
+        )[:, : self.state.n_docs].astype(bool)
+        bits[~valid.any(axis=1)] = False
+        return bits
+
+    # ------------------------------------------------------------- verify
+    def _verify(self, query: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Exact candidate re-check, smallest *local* list first (the
+        plan-less path: direct shard use and unit tests)."""
+        terms = sorted({int(t) for t in query if t >= 0})  # dedupe repeats
+        if not terms or len(ids) == 0:
+            return ids
+        terms.sort(key=lambda t: int(self._dfs[t]))
+        return self._verify_terms(tuple(terms), ids)
+
+    def _verify_terms(
+        self,
+        terms: tuple[int, ...],
+        ids: np.ndarray,
+        routes: dict[int, str] | None = None,
+    ) -> np.ndarray:
+        """Exact re-check of candidates against tier-2 in the given term
+        order.  Each term filters the (sorted) survivors either by guided
+        ε-window probes (learned-codec terms, honoring the planner's route
+        hint) or by galloping search over the fully-decoded list."""
+        out = ids
+        if not terms or len(out) == 0:
+            return out
+        if int(self._dfs[np.asarray(terms)].min()) == 0:
+            return out[:0]  # some term occurs nowhere locally: empty AND
+        guided = self.guided
+        for t in terms:
+            if len(out) == 0:
+                break
+            if guided is not None:
+                hint = routes.get(t) if routes else None
+                out = out[guided.contains(t, out, route=hint)]
+            else:
+                out = out[gallop_membership(self._postings(t), out)]
+        return out
+
+    # ------------------------------------------------------------- stats
+    def memory_bits(self) -> dict[str, int]:
+        """This shard's dense-state + tier-2 bits (facade sums across shards)."""
+        s = self.state
+        bits = {
+            "tier1_bits": int(s.tier1.size * 32),
+            "block_bitmap_bits": int(s.block_bitmaps.size * 32),
+        }
+        if self._tier2 is not None:
+            bits["tier2_bits"] = int(self._tier2.size_bits())
+        return bits
+
+    def serving_stats(self) -> dict[str, dict]:
+        """Hot-path accounting: decode-cache behaviour + guided-probe bytes."""
+        stats: dict[str, dict] = {
+            "range": {"lo": int(self.lo), "hi": int(self.hi)},
+            "decode_cache": self._decode_cache.stats(),
+        }
+        if self._guided is not None:
+            stats["guided"] = self._guided.stats.as_dict()
+        return stats

@@ -186,13 +186,14 @@ def test_eliasfano_size_dense_branch():
 
 
 def _bare_engine(inv, cfg):
-    """Engine with only the verification plumbing (skip model training)."""
-    from repro.serve.boolean import BooleanEngine
+    """Shard executor with only the verification plumbing (skip the model)."""
     from repro.serve.cache import CostLRU
+    from repro.serve.shard import ShardEngine
 
-    eng = BooleanEngine.__new__(BooleanEngine)
+    eng = ShardEngine.__new__(ShardEngine)
     eng.cfg = cfg
     eng.inv = inv
+    eng.lo, eng.hi = 0, inv.n_docs
     eng._tier2 = None
     eng._guided = None
     eng._dfs = inv.dfs
@@ -201,7 +202,7 @@ def _bare_engine(inv, cfg):
 
 
 def test_verify_empty_postings_regression():
-    """BooleanEngine._verify must not index p[-1] when a term has no postings."""
+    """ShardEngine._verify must not index p[-1] when a term has no postings."""
     from repro.index.build import InvertedIndex
     from repro.serve.boolean import ServeConfig
 

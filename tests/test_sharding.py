@@ -1,23 +1,22 @@
 """Sharding-rule unit tests: divisibility fallback, mesh-axis dedup,
 fallback chains — the logic every dry-run cell rides on."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.common.sharding import DEFAULT_RULES, resolve_axis, spec_for_shape
+from repro.common.sharding import DEFAULT_RULES, abstract_mesh, resolve_axis, spec_for_shape
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    n = len(jax.devices())
     # single-device CI mesh still exercises the resolution logic with
-    # symbolic axis names via an abstract mesh
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    # symbolic axis names via an abstract mesh; abstract_mesh papers over
+    # the AbstractMesh signature change across JAX releases
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def pod_mesh():
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_basic_resolution(mesh):
