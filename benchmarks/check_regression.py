@@ -7,6 +7,9 @@ any regresses beyond the tolerance:
   BENCH_guided_intersect.json   bytes_ratio, latency_ratio    (lower is better)
   BENCH_sharded_serve.json      latency_ratio (best sharded vs K=1, machine-
                                 normalized within one run; lower is better)
+  BENCH_ranked_topk.json        scored_fraction (postings MaxScore touches vs
+                                exhaustive; deterministic), latency_ratio
+                                (pruned vs exhaustive top-k, same run)
 
 Storage/bytes metrics are deterministic (seeded corpora), so any movement is
 a real code change.  The latency metric is the guided/full *ratio* measured
@@ -43,6 +46,12 @@ METRICS = [
     # the K=1 engine on the same run; the floor absorbs CI-runner thread
     # scheduling noise, but a sharded engine >2x slower fails anywhere
     ("BENCH_sharded_serve.json", "latency_ratio", 2.0),
+    # MaxScore work-skipping: deterministic (seeded corpus), must stay well
+    # under the exhaustive scorer's postings count
+    ("BENCH_ranked_topk.json", "scored_fraction", 0.0),
+    # pruned vs exhaustive top-k wall clock within one run; the floor absorbs
+    # scheduling noise, but pruning >1.2x slower than brute force fails
+    ("BENCH_ranked_topk.json", "latency_ratio", 1.2),
 ]
 
 

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.
   learned/.. learned-vs-classical bits/posting    (+ BENCH_learned_postings.json)
   guided/.. model-guided vs full-decode verify    (+ BENCH_guided_intersect.json)
   sharded/.. doc-partitioned serving vs K shards  (+ BENCH_sharded_serve.json)
+  ranked/.. MaxScore top-k vs exhaustive scoring  (+ BENCH_ranked_topk.json)
   kernel/.. Pallas kernels, interpret-mode        (plumbing check)
   roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
 """
@@ -24,6 +25,7 @@ def main() -> None:
     from benchmarks.codec_kernels import codec_rows, kernel_rows
     from benchmarks.guided_intersect import guided_rows
     from benchmarks.learned_postings import learned_rows
+    from benchmarks.ranked_topk import ranked_rows
     from benchmarks.roofline import rows_from_file
     from benchmarks.sharded_serve import sharded_rows
 
@@ -37,6 +39,7 @@ def main() -> None:
     rows += learned_rows()
     rows += guided_rows()
     rows += sharded_rows()
+    rows += ranked_rows()
     rows += kernel_rows()
     for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
         if os.path.exists(path):

@@ -6,9 +6,12 @@ Zipf-Mandelbrot in all three (Fig 1 of the paper). We synthesize collections
 whose df-curves match that family, calibrated to each target's scale.
 
 Representation: a corpus is stored as a CSR-like pair (doc_offsets, term_ids)
-of the *deduplicated* doc->terms incidence (Boolean retrieval only needs
-set membership, not term frequency), plus the transposed postings
-(term_offsets, doc_ids) built by index/build.py.
+of the *deduplicated* doc->terms incidence, plus the transposed postings
+(term_offsets, doc_ids) built by index/build.py.  Deduplication keeps the
+within-doc occurrence counts as ``term_freqs`` (aligned with ``term_ids``):
+Boolean retrieval ignores them, but the ranked tier scores BM25 from exactly
+these tf payloads, so the synthesizer's i.i.d. Zipf draws double as a
+realistic tf distribution for free.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ class Corpus:
     cfg: CorpusConfig
     doc_offsets: np.ndarray  # (n_docs+1,) int64 into term_ids
     term_ids: np.ndarray  # (total_postings,) int32, sorted within each doc
+    term_freqs: np.ndarray | None = None  # (total_postings,) int32 tf >= 1
 
     @property
     def n_docs(self) -> int:
@@ -68,19 +72,19 @@ def synthesize_corpus(cfg: CorpusConfig) -> Corpus:
     total = int(lengths.sum())
 
     draws = rng.choice(cfg.n_terms, size=total, p=probs).astype(np.int32)
-    offsets = np.zeros(cfg.n_docs + 1, dtype=np.int64)
-    np.cumsum(lengths, out=offsets[1:])
 
-    # dedupe + sort within each doc (vectorized via per-doc keying)
+    # dedupe + sort within each doc (vectorized via per-doc keying); the
+    # multiplicity of each (doc, term) pair is its term frequency
     doc_of = np.repeat(np.arange(cfg.n_docs, dtype=np.int64), lengths)
     key = doc_of * np.int64(cfg.n_terms) + draws
-    key = np.unique(key)  # sorts and dedupes (doc, term) pairs jointly
+    key, tf = np.unique(key, return_counts=True)  # sorts + dedupes jointly
     doc_of_u = (key // cfg.n_terms).astype(np.int64)
     term_u = (key % cfg.n_terms).astype(np.int32)
     counts = np.bincount(doc_of_u, minlength=cfg.n_docs)
     offsets = np.zeros(cfg.n_docs + 1, dtype=np.int64)
     np.cumsum(counts, out=offsets[1:])
-    return Corpus(cfg=cfg, doc_offsets=offsets, term_ids=term_u)
+    return Corpus(cfg=cfg, doc_offsets=offsets, term_ids=term_u,
+                  term_freqs=tf.astype(np.int32))
 
 
 def document_frequencies(corpus: Corpus) -> np.ndarray:

@@ -37,6 +37,35 @@ def sample_queries(
     return out
 
 
+def _zipf_term_queries(
+    dfs: np.ndarray,
+    n_queries: int,
+    min_terms: int,
+    max_terms: int,
+    zipf_a: float,
+    seed: int,
+) -> np.ndarray:
+    """Shared Zipf workload core: df-ranked vocabulary, truncated-Zipf term
+    ranks, distinct nonzero-df terms per query, -1 padded rows."""
+    if not 1 <= min_terms <= max_terms:
+        raise ValueError(f"need 1 <= min_terms <= max_terms, got {min_terms}..{max_terms}")
+    rng = np.random.default_rng(seed)
+    dfs = np.asarray(dfs)
+    by_df = np.argsort(-dfs, kind="stable")  # rank 0 = most frequent term
+    vocab = by_df[dfs[by_df] > 0]
+    if len(vocab) < max_terms:
+        raise ValueError(f"only {len(vocab)} nonempty terms < max_terms={max_terms}")
+    ranks = np.arange(1, len(vocab) + 1, dtype=np.float64)
+    p = ranks ** -zipf_a
+    p /= p.sum()
+    out = np.full((n_queries, max_terms), -1, dtype=np.int32)
+    lengths = rng.integers(min_terms, max_terms + 1, size=n_queries)
+    for i, L in enumerate(lengths):
+        picks = rng.choice(len(vocab), size=int(L), replace=False, p=p)
+        out[i, :L] = vocab[picks]
+    return out
+
+
 def zipf_conjunctions(
     dfs: np.ndarray,
     n_queries: int,
@@ -55,23 +84,36 @@ def zipf_conjunctions(
     terms with nonzero df are drawn.  Returns (n_queries, max_terms) int32,
     -1 padded.
     """
-    if not 1 <= min_terms <= max_terms:
-        raise ValueError(f"need 1 <= min_terms <= max_terms, got {min_terms}..{max_terms}")
-    rng = np.random.default_rng(seed)
-    dfs = np.asarray(dfs)
-    by_df = np.argsort(-dfs, kind="stable")  # rank 0 = most frequent term
-    vocab = by_df[dfs[by_df] > 0]
-    if len(vocab) < max_terms:
-        raise ValueError(f"only {len(vocab)} nonempty terms < max_terms={max_terms}")
-    ranks = np.arange(1, len(vocab) + 1, dtype=np.float64)
-    p = ranks ** -zipf_a
-    p /= p.sum()
-    out = np.full((n_queries, max_terms), -1, dtype=np.int32)
-    lengths = rng.integers(min_terms, max_terms + 1, size=n_queries)
-    for i, L in enumerate(lengths):
-        picks = rng.choice(len(vocab), size=int(L), replace=False, p=p)
-        out[i, :L] = vocab[picks]
-    return out
+    return _zipf_term_queries(dfs, n_queries, min_terms, max_terms, zipf_a, seed)
+
+
+def zipf_disjunctions(
+    dfs: np.ndarray,
+    n_queries: int,
+    *,
+    min_terms: int = 2,
+    max_terms: int = 6,
+    zipf_a: float = 1.0,
+    n_required: int = 0,
+    seed: int = 41,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Graded (ranked) query workload: Zipf term draws, 2-6 term OR queries.
+
+    The ranked-serving stress case: frequent low-idf terms contribute long
+    posting lists with small score upper bounds — exactly what MaxScore
+    prunes — while the flatter zipf_a mixes in mid-frequency terms whose
+    bounds keep them essential.  ``n_required`` marks the first
+    min(n_required, length) drawn terms of each query as required (mixed
+    AND/OR grading); 0 is the pure disjunctive workload.
+
+    Returns (queries, required): (n_queries, max_terms) int32 -1-padded term
+    ids and a same-shape bool mask of the required positions.
+    """
+    q = _zipf_term_queries(dfs, n_queries, min_terms, max_terms, zipf_a, seed)
+    required = np.zeros(q.shape, dtype=bool)
+    if n_required > 0:
+        required[:, :n_required] = q[:, :n_required] >= 0
+    return q, required
 
 
 def brute_force_answers(corpus: Corpus, queries: np.ndarray) -> list[np.ndarray]:

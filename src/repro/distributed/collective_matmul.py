@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.common.sharding import axis_size, pvary
+
 
 def collective_matmul_ag(
     x_shard: jax.Array,  # (m, k_local) — k-sharded input
@@ -26,7 +28,7 @@ def collective_matmul_ag(
     axis_name: str,
 ) -> jax.Array:
     """Returns y_local = x_global @ w_full_k, shape (m, n_local)."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     k_local = x_shard.shape[1]
     assert w_full_k.shape[0] == k_local * n, (w_full_k.shape, k_local, n)
@@ -41,7 +43,7 @@ def collective_matmul_ag(
         shard = jax.lax.ppermute(shard, axis_name, perm)
         return acc, shard
 
-    acc0 = jax.lax.pvary(
+    acc0 = pvary(
         jnp.zeros((x_shard.shape[0], w_full_k.shape[1]), jnp.float32), (axis_name,)
     )
     acc, _ = jax.lax.fori_loop(0, n, body, (acc0, x_shard), unroll=True)
@@ -58,7 +60,7 @@ def matmul_reduce_scatter(
     Ring: accumulate partial products while rotating partial sums so each
     device ends holding only its n/N output columns (wire = fp32 partials).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     full = x_shard.astype(jnp.float32) @ w_k_sharded.astype(jnp.float32)  # (m, n)
     n_local = full.shape[1] // n
@@ -71,7 +73,7 @@ def matmul_reduce_scatter(
         acc = jax.lax.ppermute(acc + block, axis_name, perm)
         return acc
 
-    acc0 = jax.lax.pvary(jnp.zeros((full.shape[0], n_local), jnp.float32), (axis_name,))
+    acc0 = pvary(jnp.zeros((full.shape[0], n_local), jnp.float32), (axis_name,))
     acc = jax.lax.fori_loop(0, n - 1, body, acc0, unroll=True)
     own = jax.lax.dynamic_slice_in_dim(full, idx * n_local, n_local, axis=1)
     return (acc + own).astype(x_shard.dtype)

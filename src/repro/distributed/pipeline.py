@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common.sharding import pvary, shard_map
+
 
 def gpipe(
     stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -62,8 +64,8 @@ def gpipe(
             )
             return fwd, outputs
 
-        out0 = jax.lax.pvary(jnp.zeros((m, *mb_shape), microbatches.dtype), (axis_name,))
-        prev0 = jax.lax.pvary(jnp.zeros(mb_shape, microbatches.dtype), (axis_name,))
+        out0 = pvary(jnp.zeros((m, *mb_shape), microbatches.dtype), (axis_name,))
+        prev0 = pvary(jnp.zeros(mb_shape, microbatches.dtype), (axis_name,))
         _, outputs = jax.lax.fori_loop(0, ticks, tick, (prev0, out0))
         # broadcast final outputs from last stage to all (psum over one-hot)
         mask = jnp.where(s_idx == n_stages - 1, 1.0, 0.0)
@@ -86,7 +88,7 @@ def make_pipeline_fn(
         local = jax.tree.map(lambda a: a[0], stage_params)
         return inner(local, microbatches)
 
-    return jax.shard_map(
+    return shard_map(
         with_squeeze,
         mesh=mesh,
         in_specs=(P(axis_name), P()),

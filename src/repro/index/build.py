@@ -14,9 +14,16 @@ class InvertedIndex:
     n_terms: int
     term_offsets: np.ndarray  # (n_terms+1,) int64 into doc_ids
     doc_ids: np.ndarray  # (total_postings,) int32, sorted per term
+    tfs: np.ndarray | None = None  # (total_postings,) int32 term frequencies
 
     def postings(self, t: int) -> np.ndarray:
         return self.doc_ids[self.term_offsets[t] : self.term_offsets[t + 1]]
+
+    def term_tfs(self, t: int) -> np.ndarray:
+        """Term frequencies aligned with postings(t)."""
+        if self.tfs is None:
+            raise ValueError("index carries no term frequencies")
+        return self.tfs[self.term_offsets[t] : self.term_offsets[t + 1]]
 
     def df(self, t: int | np.ndarray) -> np.ndarray:
         return self.term_offsets[np.asarray(t) + 1] - self.term_offsets[np.asarray(t)]
@@ -43,11 +50,13 @@ def build_inverted_index(corpus: Corpus) -> InvertedIndex:
     counts = np.bincount(term, minlength=corpus.n_terms)
     offsets = np.zeros(corpus.n_terms + 1, dtype=np.int64)
     np.cumsum(counts, out=offsets[1:])
+    tfs = corpus.term_freqs
     return InvertedIndex(
         n_docs=corpus.n_docs,
         n_terms=corpus.n_terms,
         term_offsets=offsets,
         doc_ids=sorted_docs,
+        tfs=None if tfs is None else tfs[order].astype(np.int32),
     )
 
 
@@ -72,6 +81,7 @@ def slice_index(inv: InvertedIndex, lo: int, hi: int) -> InvertedIndex:
         n_terms=inv.n_terms,
         term_offsets=offsets,
         doc_ids=(inv.doc_ids[sel] - lo).astype(np.int32),
+        tfs=None if inv.tfs is None else inv.tfs[sel],
     )
 
 

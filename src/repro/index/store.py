@@ -15,11 +15,21 @@ Single-index layout (``save_index`` / ``load_index``)::
                             per-array dtype+shape manifest, crc32 checksums
   <dir>/term_offsets.bin    int64  (n_terms+1,)   CSR offsets into doc_ids
   <dir>/doc_ids.bin         int32  (n_postings,)  sorted per term
+  <dir>/tfs.bin             int32  (n_postings,)  term frequencies (may be empty)
   <dir>/lens.bin            int64  (n_terms,)     posting-list lengths
   <dir>/tags.bin            uint8  (n_terms,)     codec tag per term
   <dir>/bits.bin            int64  (n_terms,)     measured size incl. TAG_BITS
   <dir>/stream_offsets.bin  int64  (n_terms+1,)   word offsets into streams
   <dir>/streams.bin         uint32 (total_words,) tag-prefixed hybrid streams
+  <dir>/payload_offsets.bin int64  (n_terms+1,)   word offsets into payloads
+  <dir>/payloads.bin        uint32 (payload_words,) packed quantized impacts
+  <dir>/ub_offsets.bin      int64  (n_terms+1,)   offsets into seg_ubs
+  <dir>/seg_ubs.bin         uint32 (n_segments,)  per-segment score bounds
+
+Layout v2 added the ranked-tier arrays (tfs, payloads, segment score
+bounds); a v1 directory still loads — its payload arrays are simply absent
+and the store serves Boolean-only.  Loading a layout *newer* than this
+reader raises ``UnsupportedVersionError`` before any array is parsed.
 
 Doc-partitioned layout (``save_sharded`` / ``load_sharded``): a top-level
 ``shards.json`` records the version, global doc count and every shard's
@@ -40,7 +50,7 @@ import numpy as np
 from repro.index.build import InvertedIndex
 from repro.postings.hybrid import HybridPostings
 
-STORE_VERSION = 1
+STORE_VERSION = 2  # v2: ranked payload streams + segment score bounds
 MAGIC = "repro-index"
 META = "meta.json"
 SHARDS_META = "shards.json"
@@ -55,6 +65,19 @@ _ARRAYS = (
     ("stream_offsets", "store", np.int64),
     ("streams", "store", np.uint32),
 )
+
+# layout-v2 additions; absent from v1 metas, loaded only when present
+_ARRAYS_V2 = (
+    ("tfs", "inv", np.int32),
+    ("payload_offsets", "store", np.int64),
+    ("payloads", "store", np.uint32),
+    ("ub_offsets", "store", np.int64),
+    ("seg_ubs", "store", np.uint32),
+)
+
+
+class UnsupportedVersionError(ValueError):
+    """The on-disk layout was written by a newer repro than this reader."""
 
 
 class StreamArena:
@@ -100,12 +123,27 @@ def save_index(path: str, inv: InvertedIndex, store: HybridPostings) -> None:
     arrays = {
         "term_offsets": np.asarray(inv.term_offsets, np.int64),
         "doc_ids": np.asarray(inv.doc_ids, np.int32),
+        "tfs": (np.zeros(0, np.int32) if inv.tfs is None
+                else np.asarray(inv.tfs, np.int32)),
         "lens": np.asarray(store.lens, np.int64),
         "tags": np.asarray(store.tags, np.uint8),
         "bits": np.asarray(store.bits, np.int64),
         "stream_offsets": stream_offsets,
         "streams": streams,
     }
+    if store.has_payloads:
+        payloads, payload_offsets = _flatten_streams(store.payload_streams)
+        arrays["payload_offsets"] = payload_offsets
+        arrays["payloads"] = payloads
+        arrays["ub_offsets"] = np.asarray(store.ub_offsets, np.int64)
+        arrays["seg_ubs"] = np.asarray(store.seg_ubs, np.uint32)
+    else:
+        zero_off = np.zeros(store.n_terms + 1, np.int64)
+        arrays["payload_offsets"] = zero_off
+        arrays["payloads"] = np.zeros(0, np.uint32)
+        arrays["ub_offsets"] = zero_off
+        arrays["seg_ubs"] = np.zeros(0, np.uint32)
+    manifest = list(_ARRAYS) + list(_ARRAYS_V2)
     meta = {
         "magic": MAGIC,
         "version": STORE_VERSION,
@@ -113,13 +151,15 @@ def save_index(path: str, inv: InvertedIndex, store: HybridPostings) -> None:
         "n_terms": int(inv.n_terms),
         "universe": int(store.universe),
         "n_postings": int(inv.n_postings),
+        "payload_bits": int(store.payload_bits),
+        "payload_scale": float(store.payload_scale),
         "arrays": {
             name: {"dtype": np.dtype(dt).name, "shape": list(arrays[name].shape),
                    "crc32": _crc(arrays[name])}
-            for name, _, dt in _ARRAYS
+            for name, _, dt in manifest
         },
     }
-    for name, _, dt in _ARRAYS:
+    for name, _, dt in manifest:
         arrays[name].astype(dt, copy=False).tofile(os.path.join(path, f"{name}.bin"))
     # meta last: a directory without meta.json is an aborted write, not an index
     with open(os.path.join(path, META), "w") as f:
@@ -134,11 +174,26 @@ def _read_meta(path: str) -> dict:
         meta = json.load(f)
     if meta.get("magic") != MAGIC:
         raise ValueError(f"{path}: not a {MAGIC} store")
-    if meta.get("version") != STORE_VERSION:
-        raise ValueError(
-            f"{path}: store version {meta.get('version')} != supported {STORE_VERSION}"
-        )
+    _check_version(meta, path)
     return meta
+
+
+def _check_version(meta: dict, path: str) -> None:
+    """Reject layouts this reader cannot parse, clearly.
+
+    Newer layouts raise UnsupportedVersionError up front (rather than a
+    crc/parse crash halfway into an array whose meaning changed); older
+    versions back to 1 load fine — their additions are simply absent.
+    """
+    version = meta.get("version")
+    if not isinstance(version, int) or version < 1:
+        raise ValueError(f"{path}: bad store version {version!r}")
+    if version > STORE_VERSION:
+        raise UnsupportedVersionError(
+            f"{path}: layout version {version} was written by a newer repro "
+            f"(this reader supports <= {STORE_VERSION}); upgrade the reader "
+            f"or re-save the index with it"
+        )
 
 
 def load_index(
@@ -148,7 +203,12 @@ def load_index(
     verify=True additionally checks every array's crc32 (reads everything)."""
     meta = _read_meta(path)
     arrays: dict[str, np.ndarray] = {}
-    for name, _, dt in _ARRAYS:
+    manifest = [
+        (name, owner, dt)
+        for name, owner, dt in list(_ARRAYS) + list(_ARRAYS_V2)
+        if name in meta["arrays"]  # v1 metas lack the ranked-tier arrays
+    ]
+    for name, _, dt in manifest:
         spec = meta["arrays"][name]
         fp = os.path.join(path, f"{name}.bin")
         n = int(np.prod(spec["shape"])) if spec["shape"] else 0
@@ -160,11 +220,13 @@ def load_index(
             arrays[name] = np.fromfile(fp, dtype=dt).reshape(spec["shape"])
         if verify and _crc(arrays[name]) != spec["crc32"]:
             raise ValueError(f"{path}/{name}.bin: crc32 mismatch (corrupt store)")
+    tfs = arrays.get("tfs")
     inv = InvertedIndex(
         n_docs=meta["n_docs"],
         n_terms=meta["n_terms"],
         term_offsets=arrays["term_offsets"],
         doc_ids=arrays["doc_ids"],
+        tfs=tfs if tfs is not None and tfs.size else None,
     )
     store = HybridPostings(
         universe=meta["universe"],
@@ -173,6 +235,14 @@ def load_index(
         bits=arrays["bits"],
         streams=StreamArena(arrays["streams"], arrays["stream_offsets"]),
     )
+    if int(meta.get("payload_bits", 0)) > 0 and "payloads" in arrays:
+        store.payload_bits = int(meta["payload_bits"])
+        store.payload_scale = float(meta.get("payload_scale", 0.0))
+        store.payload_streams = StreamArena(
+            arrays["payloads"], arrays["payload_offsets"]
+        )
+        store.ub_offsets = arrays["ub_offsets"]
+        store.seg_ubs = arrays["seg_ubs"]
     return inv, store
 
 
@@ -226,9 +296,9 @@ def load_sharded(
         raise FileNotFoundError(f"no sharded index at {path} ({SHARDS_META} missing)")
     with open(meta_path) as f:
         meta = json.load(f)
-    if meta.get("magic") != MAGIC or meta.get("version") != STORE_VERSION:
-        raise ValueError(f"{path}: unsupported sharded store "
-                         f"(magic={meta.get('magic')}, version={meta.get('version')})")
+    if meta.get("magic") != MAGIC:
+        raise ValueError(f"{path}: not a {MAGIC} sharded store")
+    _check_version(meta, path)
     _check_ranges(meta["ranges"], int(meta["n_docs"]))
     out = []
     for i, (lo, hi) in enumerate(meta["ranges"]):

@@ -1,0 +1,16 @@
+"""Host numpy reference for the bm25_score kernel — the semantics oracle.
+
+Integer impact sums are order-independent, so np.sum reproduces the kernel's
+reduction exactly; the float score is the same single f32 multiply of the
+exact integer sum.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def score_ref(impacts: np.ndarray, scale: float) -> tuple[np.ndarray, np.ndarray]:
+    """(P, T) int impacts -> (int32 scores (P,), float32 scores (P,))."""
+    ints = np.asarray(impacts, np.int64).sum(axis=1).astype(np.int32)
+    floats = ints.astype(np.float32) * np.float32(scale)
+    return ints, floats

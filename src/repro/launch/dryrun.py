@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ArchConfig, ShapeSpec
-from repro.common.sharding import sharding_for_shape
+from repro.common.sharding import mesh_context, sharding_for_shape
 from repro.configs import ARCH_IDS, get_arch
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import CellBundle, build_cell
@@ -111,7 +111,7 @@ def dryrun_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     param_sh = shardings_for(cell.param_axes, cell.param_specs, mesh)
     input_sh = shardings_for(cell.input_axes, cell.input_specs, mesh)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if cell.kind == "train":
             opt_specs = jax.eval_shape(lambda p: init_train_state(p, cell.opt_cfg),
                                        cell.param_specs)

@@ -23,7 +23,7 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.common.sharding import sharding_for_shape
+from repro.common.sharding import mesh_context, sharding_for_shape
 from repro.launch.dryrun import collective_bytes, shardings_for
 from repro.launch.mesh import make_production_mesh
 
@@ -96,7 +96,7 @@ def block_step(params, queries, block_maps, cand_docs):
 def run(multi_pod: bool):
     mesh = make_production_mesh(multi_pod=multi_pod)
     results = []
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         # --- Algorithm 1 cell
         p_sh = shardings_for(PARAM_AXES, param_specs(), mesh)
         q_spec = jax.ShapeDtypeStruct((Q_EXH, T), jnp.int32)

@@ -8,22 +8,19 @@ from __future__ import annotations
 import jax
 
 from repro.common.config import MeshConfig
+from repro.common.sharding import concrete_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return concrete_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh with the production axis names (CPU tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    return concrete_mesh((1, n), ("data", "model"))
 
 
 def mesh_config(multi_pod: bool = False) -> MeshConfig:

@@ -9,8 +9,12 @@ algorithm. --verified re-checks against tier-2 for exact results.
 from the reloaded store — the build-then-serve round trip that proves a
 restart needs no re-encoding.
 
+--topk K additionally serves a ranked (BM25 top-K) disjunctive batch over
+the tier-2 payload streams, checked bit-exact against brute-force scoring.
+
   PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --index-dir /tmp/idx
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ from repro.common.config import CorpusConfig, LearnedIndexConfig, OptimizerConfi
 from repro.core import fit_thresholds, init_membership, membership_loss
 from repro.data.corpus import synthesize_corpus
 from repro.data.loader import membership_batches
-from repro.data.queries import brute_force_answers, sample_queries
+from repro.data.queries import brute_force_answers, sample_queries, zipf_disjunctions
 from repro.index.build import build_inverted_index
 from repro.serve import BooleanEngine, ServeConfig
 from repro.train import init_train_state, make_train_step
@@ -68,6 +72,9 @@ def main():
     ap.add_argument("--index-dir", default=None,
                     help="persist the sharded index here, then serve from the "
                          "reloaded store (build-then-serve round trip)")
+    ap.add_argument("--topk", type=int, default=10,
+                    help="also serve a ranked top-K disjunctive batch "
+                         "(0 disables the ranked path)")
     args = ap.parse_args()
 
     corpus = synthesize_corpus(
@@ -109,6 +116,26 @@ def main():
     print(f"[serve] summary: {s['n_shards']} shards, cache "
           f"{s['cache_hits']}h/{s['cache_misses']}m/{s['cache_evictions']}e, "
           f"probe bytes {s['probe_bytes']} (ratio {s['bytes_ratio']:.3f})")
+
+    if args.topk > 0:
+        from repro.rank.score import ImpactModel, brute_force_topk
+
+        ranked_q, _ = zipf_disjunctions(inv.dfs, args.queries, seed=7)
+        t0 = time.time()
+        ranked = eng.query_topk(ranked_q, args.topk)
+        dt = (time.time() - t0) / args.queries * 1e3
+        im = eng.impact_model or ImpactModel.build(inv)
+        oracle = brute_force_topk(inv, im, ranked_q, args.topk)
+        ok = all(
+            np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores)
+            for r, e in zip(ranked, oracle)
+        )
+        rs = eng.serving_stats()["ranked"]
+        print(f"[serve] ranked top-{args.topk}: {args.queries} OR queries, "
+              f"{dt:.2f} ms/query, exact-vs-BM25-brute-force={ok}, "
+              f"scored {rs['touched_postings']}/{rs['exhaustive_postings']} "
+              f"postings (fraction {rs['scored_fraction']:.3f})")
+        assert ok, "ranked serving must match brute-force BM25"
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.common.config import ArchConfig
+from repro.common.sharding import shard_map
 
 CAPACITY_FACTOR = 1.25
 
@@ -130,7 +131,7 @@ def moe_ffn_a2a(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     x_spec = P(data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None), None, None)
     w_spec = P(ep_axes, None, None)
-    return jax.shard_map(
+    return shard_map(
         inner,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), P(None), w_spec, w_spec, w_spec),

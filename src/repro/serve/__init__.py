@@ -1,15 +1,28 @@
+from repro.rank.score import TopKResult
 from repro.serve.boolean import BooleanEngine, ServeConfig
-from repro.serve.planner import BatchPlan, QueryPlan, ShardPlan, plan_batch
+from repro.serve.planner import (
+    BatchPlan,
+    QueryPlan,
+    RankedQueryPlan,
+    ShardPlan,
+    plan_batch,
+    plan_ranked,
+    ranked_run_mask,
+)
 from repro.serve.shard import ShardEngine, shard_ranges, slice_bloom
 
 __all__ = [
     "BatchPlan",
     "BooleanEngine",
     "QueryPlan",
+    "RankedQueryPlan",
     "ServeConfig",
     "ShardEngine",
     "ShardPlan",
+    "TopKResult",
     "plan_batch",
+    "plan_ranked",
+    "ranked_run_mask",
     "shard_ranges",
     "slice_bloom",
 ]

@@ -21,6 +21,15 @@ The paper's system in deployable form, refactored into three layers:
 unsharded engine bit-for-bit; engines can also start from the persistent
 shard-store (index/store.py) via ``from_store`` — no re-encoding, stream
 bytes page in lazily via mmap.
+
+``query_topk`` is the ranked path over the same shards: the planner dedupes
+terms and computes per-shard run masks, each ShardEngine returns its local
+top-k by MaxScore dynamic pruning over the tier-2 payload streams, and the
+facade folds shard heaps in ascending doc-range order, forwarding the
+running k-th best score as the next shard's pruning floor.  Scores are
+integer quantized-impact sums with ties broken by ascending doc id, so the
+merged top-k is bit-identical for K=1 and any K>1 — and to the brute-force
+BM25 oracle (rank.score.brute_force_topk).
 """
 from __future__ import annotations
 
@@ -33,7 +42,9 @@ from repro.common.config import LearnedIndexConfig
 from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex
 from repro.postings.search import ProbeStats
-from repro.serve.planner import BatchPlan, plan_batch
+from repro.rank.score import BM25Params, ImpactModel, TopKResult, select_topk
+from repro.rank.topk import RankedStats
+from repro.serve.planner import BatchPlan, plan_batch, plan_ranked, ranked_run_mask
 from repro.serve.shard import WORD_BITS, ShardEngine, shard_ranges, slice_bloom, unpack_row
 
 
@@ -54,6 +65,13 @@ class ServeConfig:
     # raise this on free-threaded builds or guided_kernel workloads where
     # per-shard probe batches release the GIL for real work.
     shard_workers: int = 0
+    # ---- ranked (top-k) serving
+    ranked: bool = True  # build payload streams when the index carries tfs
+    payload_bits: int = 8  # quantized-impact width (BM25Params.bits)
+    # queries whose total postings fit under this skip MaxScore bookkeeping
+    # and score exhaustively (still exact); 0 forces pruning everywhere
+    topk_exhaustive_cutoff: int = 2048
+    score_kernel: bool = False  # batch exhaustive scoring on the Pallas kernel
 
 
 class BooleanEngine:
@@ -73,19 +91,34 @@ class BooleanEngine:
         self.inv = inv
         self.li_cfg = li_cfg
         self.n_docs = lb.n_docs
+        self._impact_model = None
+        can_rank = (
+            self.cfg.ranked
+            and inv is not None
+            and inv.tfs is not None
+            and self.cfg.postings_store == "hybrid"
+        )
+        # shards get the *provider*, not the model: quantizer fitting is an
+        # O(n_postings) float64 pass that Boolean-only serving never needs,
+        # so it runs at first ranked use (ensure_payloads), not construction
+        provider = self._build_impact_model if can_rank else None
         if shards is None:
             if inv is None:
                 raise ValueError("need an InvertedIndex (or prebuilt shards)")
             shards = [
                 (
                     (lo, hi),
-                    ShardEngine.from_range(lb, inv, li_cfg, self.cfg, lo, hi)
+                    ShardEngine.from_range(
+                        lb, inv, li_cfg, self.cfg, lo, hi,
+                        impact_model=provider,
+                    )
                     if hi > lo else None,
                 )
                 for lo, hi in shard_ranges(inv.n_docs, self.cfg.n_shards)
             ]
         self._ranges = [r for r, _ in shards]
         self._shards = [s for _, s in shards]
+        self._ranked_queries = 0  # facade-level count (shards count pairs)
         active = self.shards
         if inv is not None:
             self._global_dfs = inv.dfs
@@ -98,6 +131,21 @@ class BooleanEngine:
             )
             if len(active) > 1 and self.cfg.shard_workers > 1 else None
         )
+
+    def _build_impact_model(self) -> ImpactModel:
+        """Fit (once) the collection-global quantizer: every shard's payload
+        stream is then a bit-exact slice of the global one (rank/score.py)."""
+        if self._impact_model is None:
+            self._impact_model = ImpactModel.build(
+                self.inv, BM25Params(bits=self.cfg.payload_bits)
+            )
+        return self._impact_model
+
+    @property
+    def impact_model(self) -> ImpactModel | None:
+        """The fitted global quantizer, or None for engines that cannot rank
+        from live arrays (no tfs / raw store / loaded-store payloads)."""
+        return self._impact_model
 
     @classmethod
     def from_store(
@@ -139,6 +187,8 @@ class BooleanEngine:
 
         if self.cfg.postings_store != "hybrid":
             raise ValueError("only the hybrid postings store is persistable")
+        for sh in self.shards:
+            sh.ensure_payloads()  # the saved layout carries the ranked tier
         entries = [
             ((lo, hi), sh.inv if sh else None, sh.tier2 if sh else None)
             for (lo, hi), sh in zip(self._ranges, self._shards)
@@ -179,6 +229,57 @@ class BooleanEngine:
         if q.shape[0] == 0 or (q < 0).all():
             return np.zeros((q.shape[0], words), dtype=np.uint32)
         return self._execute(q)
+
+    def query_topk(
+        self,
+        queries: np.ndarray,
+        k: int = 10,
+        *,
+        mode: str = "or",
+        required: np.ndarray | None = None,
+    ) -> list[TopKResult]:
+        """(Q, T) padded term ids -> exact ranked top-k per query.
+
+        ``mode`` "or" scores any matching term (disjunctive), "and" requires
+        every term; a boolean ``required`` mask of queries' shape marks a
+        per-position required subset for mixed AND/OR.  Results order by
+        (score desc, doc id asc) and are bit-identical across shard counts
+        and to brute-force quantized-BM25 over decoded postings.
+        """
+        q = np.asarray(queries, dtype=np.int32)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (Q, T), got shape {q.shape}")
+        empty = TopKResult(ids=np.zeros(0, np.int32), scores=np.zeros(0, np.int64))
+        if k <= 0:
+            return [empty for _ in range(q.shape[0])]
+        qplans = plan_ranked(q, self._global_dfs, mode=mode, required=required)
+        self._ranked_queries += len(qplans)
+        active = self.shards
+        runs = [ranked_run_mask(qplans, sh.local_dfs) for sh in active]
+        out: list[TopKResult] = []
+        for i, qp in enumerate(qplans):
+            if qp.dead:
+                out.append(empty)
+                continue
+            heap = empty
+            # ascending doc ranges + ascending-id tie break make the floor a
+            # strict bar: a later shard's tie can never displace the heap
+            for sh, run in zip(active, runs):
+                if not run[i]:
+                    continue
+                floor = int(heap.scores[k - 1]) if len(heap.scores) == k else 0
+                part = sh.query_topk_local(
+                    qp.terms, k, required=qp.required, floor=floor
+                )
+                if len(part.ids) == 0:
+                    continue
+                heap = select_topk(
+                    np.concatenate([heap.ids, part.ids]),
+                    np.concatenate([heap.scores, part.scores]),
+                    k,
+                )
+            out.append(heap)
+        return out
 
     def _padded(self, queries: np.ndarray) -> np.ndarray:
         q = np.asarray(queries, dtype=np.int32)
@@ -234,15 +335,19 @@ class BooleanEngine:
             "block_bitmap_bits": 0,
             "backup_bits": int(self.lb.backup_keys.size * 64),
         }
-        tier2_bits = None
+        tier2_bits = payload_bits = None
         for sh in self.shards:
             bits = sh.memory_bits()
             report["tier1_bits"] += bits["tier1_bits"]
             report["block_bitmap_bits"] += bits["block_bitmap_bits"]
             if "tier2_bits" in bits:
                 tier2_bits = (tier2_bits or 0) + bits["tier2_bits"]
+            if "payload_bits" in bits:
+                payload_bits = (payload_bits or 0) + bits["payload_bits"]
         if tier2_bits is not None:
             report["tier2_bits"] = tier2_bits
+        if payload_bits is not None:
+            report["payload_bits"] = payload_bits
         return report
 
     def serving_stats(self) -> dict[str, dict]:
@@ -265,6 +370,18 @@ class BooleanEngine:
                           "full_equiv_bytes")
             })
             stats["guided"] = agg.as_dict()
+        ranked = [s["ranked"] for s in per_shard if "ranked" in s]
+        if ranked:
+            agg = RankedStats(**{
+                f: sum(int(r[f]) for r in ranked)
+                for f in ("queries", "exhaustive_queries", "scored_postings",
+                          "probed_postings", "exhaustive_postings")
+            }).as_dict()
+            # shard counters tally (query, shard) pairs; report the facade's
+            # query count on top so per-query averages come out right
+            agg["shard_queries"] = agg.pop("queries")
+            agg["queries"] = self._ranked_queries
+            stats["ranked"] = agg
         stats["summary"] = {
             "n_shards": len(self.shards),
             "cache_hits": cache["hits"],
@@ -272,6 +389,7 @@ class BooleanEngine:
             "cache_evictions": cache["evictions"],
             "probe_bytes": stats["guided"]["guided_bytes"] if guided else 0,
             "bytes_ratio": stats["guided"]["bytes_ratio"] if guided else 0.0,
+            "scored_fraction": stats["ranked"]["scored_fraction"] if ranked else 0.0,
         }
         return stats
 
@@ -282,3 +400,5 @@ class BooleanEngine:
             if sh._guided is not None:
                 sh._guided.reset_stats()
             sh._decode_cache.reset_counters()
+            sh.ranked_stats = RankedStats()
+        self._ranked_queries = 0

@@ -17,6 +17,13 @@ returns its results as a *packed bitmap* over local doc ids — 32x cheaper to
 move to the merging facade than id lists, and word-copyable into the global
 bitmap because shard boundaries are aligned to 32-doc words
 (``shard_ranges``).
+
+``query_topk_local`` is the ranked path: the shard runs MaxScore dynamic
+pruning (repro.rank.topk) against its tier-2 payload streams — full decodes
+through the CostLRU, candidate probes through the guided ε-window rank
+models landing directly on rank-aligned payloads, segment-granularity score
+bounds from the store — and returns its local top-k in *global* doc ids so
+the facade can merge shard heaps and forward score floors.
 """
 from __future__ import annotations
 
@@ -27,6 +34,8 @@ from repro.core import algorithms as alg
 from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex, slice_index
 from repro.index.intersect import gallop_membership
+from repro.rank.score import TopKResult
+from repro.rank.topk import RankedStats, topk_query
 from repro.serve.cache import CostLRU
 from repro.serve.planner import QueryPlan, ShardPlan
 
@@ -101,6 +110,9 @@ class ShardEngine:
         lo: int = 0,
         hi: int | None = None,
         tier2=None,  # preloaded HybridPostings (the persistent shard-store)
+        # global rank.score.ImpactModel, or a zero-arg provider of one (the
+        # facade defers the O(n_postings) quantizer fit to first ranked use)
+        impact_model=None,
     ):
         self.cfg = cfg
         self.inv = inv
@@ -109,6 +121,9 @@ class ShardEngine:
         self.hi = inv.n_docs if hi is None else hi
         self._tier2 = tier2 if cfg.postings_store == "hybrid" else None
         self._guided = None  # lazy GuidedPostings over tier-2
+        self._impact_model = impact_model
+        self._ranked = None  # lazy _RankedSource over tier-2 payloads
+        self.ranked_stats = RankedStats()
         self._dfs = inv.dfs  # local document frequencies, materialized once
         self._decode_cache: CostLRU[int, np.ndarray] = CostLRU(cfg.cache_budget_bytes)
         self.state = alg.build_engine(
@@ -117,11 +132,13 @@ class ShardEngine:
         )
 
     @classmethod
-    def from_range(cls, lb, inv, li_cfg, cfg, lo: int, hi: int, tier2=None) -> "ShardEngine":
+    def from_range(
+        cls, lb, inv, li_cfg, cfg, lo: int, hi: int, tier2=None, impact_model=None
+    ) -> "ShardEngine":
         """Build the shard by slicing a global model + index to [lo, hi)."""
         return cls(
             slice_bloom(lb, lo, hi), slice_index(inv, lo, hi), li_cfg, cfg,
-            lo=lo, hi=hi, tier2=tier2,
+            lo=lo, hi=hi, tier2=tier2, impact_model=impact_model,
         )
 
     # ------------------------------------------------------------- stores
@@ -142,6 +159,31 @@ class ShardEngine:
 
             self._tier2 = HybridPostings.from_index(self.inv)
         return self._tier2
+
+    def ensure_payloads(self) -> None:
+        """Quantize + attach this shard's payload stream if it can and hasn't.
+
+        Deferred off the Boolean-only path (packing every term costs real
+        startup time); the ranked path and the persisting save() force it.
+        The values are bit-identical to the global stream's slice because
+        the ImpactModel's statistics are collection-global.
+        """
+        store = self.tier2
+        if (
+            store is None
+            or store.has_payloads
+            or self._impact_model is None
+            or self.inv.tfs is None
+        ):
+            return
+        if callable(self._impact_model):
+            self._impact_model = self._impact_model()
+        im = self._impact_model
+        store.attach_payloads(
+            im.quantize_index(self.inv, lo=self.lo),
+            bits=im.params.bits,
+            scale=im.scale,
+        )
 
     @property
     def guided(self):
@@ -166,6 +208,55 @@ class ShardEngine:
             hit = store.postings(t)
             self._decode_cache.put(t, hit, hit.nbytes)
         return hit
+
+    # ------------------------------------------------------------- ranked
+    @property
+    def ranked(self) -> "_RankedSource":
+        """RankedSource over this shard's payload streams (built on demand)."""
+        if self._ranked is None:
+            self.ensure_payloads()
+            store = self.tier2
+            if store is None or not store.has_payloads:
+                raise ValueError(
+                    "ranked serving needs tier-2 payload streams: build the "
+                    "engine from an index with term frequencies (ImpactModel) "
+                    "or load a layout-v2 store saved with payloads"
+                )
+            self._ranked = _RankedSource(self)
+        return self._ranked
+
+    def query_topk_local(
+        self,
+        terms,
+        k: int,
+        *,
+        required=(),
+        floor: int = 0,
+    ) -> TopKResult:
+        """This shard's exact top-k in *global* doc ids — descending score
+        with ties ascending id.  ``floor`` is the facade's running k-th best
+        score: only strictly better docs can matter here (later shards hold
+        larger ids, so floor ties lose)."""
+        src = self.ranked
+        scorer = self._batch_scorer() if self.cfg.score_kernel else None
+        ans = topk_query(
+            src, terms, k,
+            required=required, floor=floor,
+            exhaustive_cutoff=self.cfg.topk_exhaustive_cutoff,
+            stats=self.ranked_stats, batch_scorer=scorer,
+        )
+        return TopKResult(
+            ids=(ans.ids.astype(np.int64) + self.lo).astype(np.int32),
+            scores=ans.scores,
+        )
+
+    def _batch_scorer(self):
+        from repro.kernels.bm25_score.ops import score_candidates
+
+        scale = self.tier2.payload_scale / max(
+            (1 << self.tier2.payload_bits) - 1, 1
+        )
+        return lambda imp: score_candidates(imp, scale)[0]
 
     # ------------------------------------------------------------- planning
     def route_term(self, t: int, est_cands: int) -> str | None:
@@ -292,6 +383,8 @@ class ShardEngine:
         }
         if self._tier2 is not None:
             bits["tier2_bits"] = int(self._tier2.size_bits())
+            if self._tier2.has_payloads:
+                bits["payload_bits"] = int(self._tier2.payload_size_bits())
         return bits
 
     def serving_stats(self) -> dict[str, dict]:
@@ -302,4 +395,68 @@ class ShardEngine:
         }
         if self._guided is not None:
             stats["guided"] = self._guided.stats.as_dict()
+        if self.ranked_stats.queries:
+            stats["ranked"] = self.ranked_stats.as_dict()
         return stats
+
+
+class _RankedSource:
+    """rank.topk.RankedSource over one shard's tier-2 payload streams.
+
+    Full decodes go through the shard's decode-cost-budgeted CostLRU (ids
+    under the term key the Boolean path shares, payload vectors under a
+    ("pay", t) key); probes ride the guided ε-window rank models where the
+    term's codec is learned and fall back to binary search in the cached
+    decode otherwise.  Either way the payload read is rank-aligned —
+    ``payload_at`` touches only the probe's packed words.
+    """
+
+    def __init__(self, shard: ShardEngine):
+        self._sh = shard
+        self._store = shard.tier2
+
+    def n(self, t: int) -> int:
+        return int(self._sh._dfs[t])
+
+    def ub(self, t: int) -> int:
+        return self._store.term_ub(t)
+
+    def _payloads(self, t: int) -> np.ndarray:
+        key = ("pay", t)
+        hit = self._sh._decode_cache.get(key)
+        if hit is None:
+            hit = self._store.payloads(t).astype(np.int64)
+            self._sh._decode_cache.put(key, hit, hit.nbytes)
+        return hit
+
+    def full(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        return self._sh._postings(t), self._payloads(t)
+
+    def probe(self, t: int, cands: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        g = self._sh.guided
+        if g is not None:
+            # one probe path for every codec: GuidedPostings routes learned
+            # terms through ε-windows and classical terms through the cached
+            # decode, and its ProbeStats accounting covers both uniformly
+            found, rank = g.probe(t, cands)
+        else:  # use_guided=False: binary search in the cached decode
+            p = self._sh._postings(t)
+            rank = np.searchsorted(p, cands).astype(np.int64)
+            found = (rank < len(p)) & (p[np.minimum(rank, len(p) - 1)] == cands)
+        q = np.zeros(len(cands), np.int64)
+        if found.any():
+            q[found] = self._store.payload_at(t, rank[found]).astype(np.int64)
+        return found, q
+
+    def seg_ub(self, t: int, cands: np.ndarray) -> np.ndarray:
+        """Block-max bound per candidate: its bracketing segment's max impact
+        (learned codecs), the whole-list bound otherwise."""
+        g = self._sh.guided
+        tm = g.term_model(t) if g is not None else None
+        if tm is None:
+            return np.full(len(cands), self._store.term_ub(t), np.int64)
+        seg = np.searchsorted(tm.seg_first, np.asarray(cands, np.int64), side="right") - 1
+        ubs = self._store.term_seg_ubs(t).astype(np.int64)
+        out = ubs[np.maximum(seg, 0)]
+        out[seg < 0] = 0  # candidate precedes the whole list: cannot match
+        return out

@@ -24,11 +24,12 @@ def test_compressed_allreduce_subprocess():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed import compressed_allreduce
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.common.sharding import concrete_mesh, shard_map
+mesh = concrete_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 xs = rng.standard_normal((8, 64)).astype(np.float32)
 f = lambda x: compressed_allreduce({"g": x}, mesh, "data")["g"]
-out = np.asarray(jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data")))(jnp.asarray(xs)))
+out = np.asarray(jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P("data")))(jnp.asarray(xs)))
 exact = xs.sum(0)
 for r in range(8):
     assert np.array_equal(out[r], out[0]), "bitwise consistency"
@@ -42,14 +43,15 @@ def test_collective_matmul_subprocess():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed import collective_matmul_ag, matmul_reduce_scatter
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.common.sharding import concrete_mesh, shard_map
+mesh = concrete_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 x = rng.standard_normal((16, 64)).astype(np.float32)
 w = rng.standard_normal((64, 32)).astype(np.float32)
-cm = jax.jit(jax.shard_map(lambda a, b: collective_matmul_ag(a, b, "data"), mesh=mesh,
+cm = jax.jit(shard_map(lambda a, b: collective_matmul_ag(a, b, "data"), mesh=mesh,
     in_specs=(P(None, "data"), P(None, "data")), out_specs=P(None, "data")))
 assert np.allclose(np.asarray(cm(jnp.asarray(x), jnp.asarray(w))), x @ w, atol=1e-4)
-rs = jax.jit(jax.shard_map(lambda a, b: matmul_reduce_scatter(a, b, "data"), mesh=mesh,
+rs = jax.jit(shard_map(lambda a, b: matmul_reduce_scatter(a, b, "data"), mesh=mesh,
     in_specs=(P(None, "data"), P("data", None)), out_specs=P(None, "data")))
 assert np.allclose(np.asarray(rs(jnp.asarray(x), jnp.asarray(w))), x @ w, atol=1e-4)
 """)
@@ -59,7 +61,8 @@ def test_pipeline_subprocess():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed import make_pipeline_fn
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.common.sharding import concrete_mesh
+mesh = concrete_mesh((4,), ("pipe",))
 rng = np.random.default_rng(0)
 S, M, mb, dim = 4, 8, 4, 16
 Ws = (rng.standard_normal((S, dim, dim)).astype(np.float32) * 0.3)
@@ -83,13 +86,14 @@ from repro.launch.steps import build_cell
 from repro.launch.dryrun import shardings_for, _opt_axes_like
 from repro.train import init_train_state
 from repro.common.config import ShapeSpec
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.common.sharding import concrete_mesh, mesh_context
+mesh = concrete_mesh((2, 4), ("data", "model"))
 cfg, _, _ = get_arch("gemma2-2b")
 rc = reduce_config(cfg).replace(d_model=64, n_heads=4, head_dim=16)
 cell = build_cell(rc, ShapeSpec(name="t", kind="train", seq_len=32, global_batch=8))
 param_sh = shardings_for(cell.param_axes, cell.param_specs, mesh)
 input_sh = shardings_for(cell.input_axes, cell.input_specs, mesh)
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     params = cell.init_fn(jax.random.key(0))
     params = jax.tree.map(jax.device_put, params, param_sh)
     opt = init_train_state(params, cell.opt_cfg)
@@ -109,8 +113,9 @@ def test_checkpoint_elastic_reshard_subprocess():
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint, restore_checkpoint
-mesh1 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
-mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.common.sharding import concrete_mesh
+mesh1 = concrete_mesh((8,), ("data",))
+mesh2 = concrete_mesh((2, 4), ("data", "model"))
 x = jnp.arange(64.0).reshape(8, 8)
 xs = jax.device_put(x, NamedSharding(mesh1, P("data", None)))
 with tempfile.TemporaryDirectory() as d:

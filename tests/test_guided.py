@@ -268,8 +268,47 @@ def test_cost_lru_always_keeps_newest():
 
 
 def test_cost_lru_rejects_nonpositive_budget():
-    with pytest.raises(ValueError):
-        CostLRU(0)
+    """Zero and negative budgets are config errors, not empty caches: every
+    serving path assumes the just-decoded entry can be retained, so a
+    budget that could never hold anything must fail loudly at construction."""
+    for bad in (0, -1, -(1 << 40)):
+        with pytest.raises(ValueError, match="budget"):
+            CostLRU(bad)
+
+
+def test_cost_lru_oversized_entry_evicts_everything_else():
+    """A single entry larger than the whole budget stays resident (the
+    verification round needs the list it just decoded) but evicts every
+    other entry; counters and cost accounting must reflect that exactly."""
+    lru = CostLRU(100)
+    lru.put("a", "A", 30)
+    lru.put("b", "B", 30)
+    lru.put("huge", "H", 1_000)
+    assert lru.get("huge") == "H"
+    assert lru.get("a") is None and lru.get("b") is None
+    assert lru.evictions == 2
+    assert len(lru) == 1
+    assert lru.total_cost == 1_000  # over budget by design, but accounted
+    s = lru.stats()
+    assert s["cost_bytes"] == 1_000 and s["entries"] == 1
+    # the oversized entry is itself evictable once anything newer lands
+    lru.put("tiny", "T", 1)
+    assert lru.get("huge") is None and lru.get("tiny") == "T"
+    assert lru.total_cost == 1
+
+
+def test_cost_lru_oversized_reput_updates_cost():
+    """Re-putting a key replaces its cost instead of double counting, even
+    across the oversized boundary in both directions."""
+    lru = CostLRU(100)
+    lru.put("k", "v1", 500)
+    assert lru.total_cost == 500
+    lru.put("k", "v2", 10)  # shrink back under budget
+    assert lru.total_cost == 10 and len(lru) == 1
+    assert lru.get("k") == "v2"
+    lru.put("k", "v3", 700)  # grow over budget again: still the sole entry
+    assert lru.total_cost == 700 and len(lru) == 1
+    assert lru.evictions == 0  # replacement is not an eviction
 
 
 # ------------------------------------------------------------ workload

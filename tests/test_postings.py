@@ -190,12 +190,17 @@ def _bare_engine(inv, cfg):
     from repro.serve.cache import CostLRU
     from repro.serve.shard import ShardEngine
 
+    from repro.rank.topk import RankedStats
+
     eng = ShardEngine.__new__(ShardEngine)
     eng.cfg = cfg
     eng.inv = inv
     eng.lo, eng.hi = 0, inv.n_docs
     eng._tier2 = None
     eng._guided = None
+    eng._impact_model = None
+    eng._ranked = None
+    eng.ranked_stats = RankedStats()
     eng._dfs = inv.dfs
     eng._decode_cache = CostLRU(cfg.cache_budget_bytes)
     return eng

@@ -1,0 +1,396 @@
+"""Ranked top-k retrieval: payloads, scoring, MaxScore pruning, sharded merge.
+
+The load-bearing property is *bit-exactness*: `query_topk` must reproduce
+the brute-force quantized-BM25 oracle — ids and integer scores — for every
+shard count, query mode, pruning configuration, and the persistent-store
+round trip.  Scores are integer impact sums with ties broken by ascending
+doc id, so equality here is array equality, not allclose.
+"""
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.config import CorpusConfig, LearnedIndexConfig
+from repro.core import fit_thresholds, init_membership
+from repro.data.corpus import synthesize_corpus
+from repro.data.queries import zipf_disjunctions
+from repro.index.build import build_inverted_index, slice_index
+from repro.index.store import UnsupportedVersionError, load_index, save_index
+from repro.postings.hybrid import HybridPostings
+from repro.rank.score import BM25Params, ImpactModel, brute_force_topk, select_topk
+from repro.rank.topk import topk_query
+from repro.serve import BooleanEngine, ServeConfig, plan_ranked, ranked_run_mask
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def system():
+    corpus = synthesize_corpus(
+        CorpusConfig(n_docs=800, n_terms=3000, avg_doc_len=50, seed=11)
+    )
+    inv = build_inverted_index(corpus)
+    li = LearnedIndexConfig(embed_dim=16, truncation_k=16, block_size=128)
+    params, _ = init_membership(jax.random.key(0), li, corpus.n_terms, corpus.n_docs)
+    lb = fit_thresholds(params, inv)
+    im = ImpactModel.build(inv, BM25Params())
+    return corpus, inv, li, lb, im
+
+
+@pytest.fixture(scope="module")
+def queries(system):
+    _, inv, _, _, _ = system
+    q, _ = zipf_disjunctions(inv.dfs, 24, seed=5)
+    return q
+
+
+# ---------------------------------------------------------------- payloads
+def test_corpus_carries_tfs(system):
+    corpus, inv, *_ = system
+    assert corpus.term_freqs is not None and corpus.term_freqs.min() >= 1
+    assert inv.tfs is not None and len(inv.tfs) == inv.n_postings
+    # tf of a (term, doc) posting matches the corpus multiplicity
+    t = int(np.argmax(inv.dfs))
+    assert np.array_equal(np.sort(inv.postings(t)), inv.postings(t))
+    assert len(inv.term_tfs(t)) == int(inv.dfs[t])
+
+
+def test_slice_index_carries_tfs(system):
+    _, inv, *_ = system
+    sl = slice_index(inv, 32, 416)
+    sel = (inv.doc_ids >= 32) & (inv.doc_ids < 416)
+    assert np.array_equal(sl.tfs, inv.tfs[sel])
+
+
+def test_quantization_range_and_determinism(system):
+    _, inv, _, _, im = system
+    q = im.quantize_index(inv)
+    assert q.min() >= 1 and q.max() == im.max_quant
+    # shard slice of the global payload stream == locally quantized slice
+    sl = slice_index(inv, 96, 512)
+    local = im.quantize_index(sl, lo=96)
+    term_of = np.repeat(np.arange(inv.n_terms), inv.dfs)
+    sel = (inv.doc_ids >= 96) & (inv.doc_ids < 512)
+    assert np.array_equal(local, q[sel]), "shard quantization must be a slice"
+    del term_of
+
+
+def test_payload_streams_roundtrip(system):
+    _, inv, _, _, im = system
+    store = HybridPostings.from_index(inv)
+    quants = im.quantize_index(inv)
+    store.attach_payloads(quants, bits=im.params.bits, scale=im.scale)
+    offs = np.zeros(inv.n_terms + 1, np.int64)
+    np.cumsum(store.lens, out=offs[1:])
+    rng = np.random.default_rng(0)
+    for t in rng.choice(inv.n_terms, 60, replace=False):
+        t = int(t)
+        n = int(store.lens[t])
+        expect = quants[offs[t] : offs[t + 1]]
+        if n == 0:
+            continue
+        assert np.array_equal(store.payloads(t), expect)
+        ranks = rng.integers(0, n, size=min(8, n))
+        assert np.array_equal(store.payload_at(t, ranks), expect[ranks])
+        assert store.term_ub(t) == int(expect.max())
+        # segment bounds are true maxima over their rank ranges
+        subs = store.term_seg_ubs(t)
+        assert subs.max() == expect.max()
+        assert all(int(u) <= store.term_ub(t) for u in subs)
+
+
+def test_attach_payloads_validates(system):
+    _, inv, *_ = system
+    store = HybridPostings.from_index(inv)
+    with pytest.raises(ValueError):
+        store.attach_payloads(np.ones(3, np.uint32), bits=8, scale=1.0)
+    with pytest.raises(ValueError):
+        store.attach_payloads(
+            np.full(inv.n_postings, 256, np.uint32), bits=8, scale=1.0
+        )
+    with pytest.raises(ValueError):
+        store.payloads(0)  # nothing attached yet
+
+
+# ---------------------------------------------------------------- planner
+def test_plan_ranked_modes(system):
+    _, inv, *_ = system
+    zero_df = int(np.nonzero(inv.dfs == 0)[0][0])
+    live = np.nonzero(inv.dfs > 0)[0][:3].astype(np.int32)
+    q = np.array([
+        [live[0], live[1], live[1], -1],  # dupes collapse
+        [zero_df, live[2], -1, -1],  # dead term drops
+        [-1, -1, -1, -1],  # all padding
+        [zero_df, -1, -1, -1],  # nothing live
+    ], np.int32)
+    plans = plan_ranked(q, inv.dfs, mode="or")
+    assert plans[0].terms == tuple(sorted((int(live[0]), int(live[1]))))
+    assert plans[1].terms == (int(live[2]),) and not plans[1].dead
+    assert plans[2].dead and plans[3].dead
+    # AND: a zero-df term kills the query
+    plans = plan_ranked(q, inv.dfs, mode="and")
+    assert plans[1].dead
+    assert plans[0].required == plans[0].terms
+    # mixed via required mask
+    req = np.zeros(q.shape, bool)
+    req[0, 0] = True
+    plans = plan_ranked(q, inv.dfs, required=req)
+    assert plans[0].required == (int(live[0]),)
+    with pytest.raises(ValueError):
+        plan_ranked(q, inv.dfs, mode="nope")
+
+
+def test_ranked_run_mask_skips_locally_absent(system):
+    _, inv, *_ = system
+    live = np.nonzero(inv.dfs > 0)[0][:2].astype(np.int32)
+    q = np.array([[live[0], live[1], -1, -1]], np.int32)
+    plans = plan_ranked(q, inv.dfs, mode="and")
+    local = inv.dfs.copy()
+    local[live[0]] = 0  # required term absent on this "shard"
+    assert not ranked_run_mask(plans, local)[0]
+    plans = plan_ranked(q, inv.dfs, mode="or")
+    assert ranked_run_mask(plans, local)[0]  # other term still scores
+    local[live[1]] = 0
+    assert not ranked_run_mask(plans, local)[0]
+
+
+# ---------------------------------------------------------------- exactness
+def _check(results, oracle):
+    for r, e in zip(results, oracle):
+        assert np.array_equal(r.ids, e.ids), (r.ids, e.ids)
+        assert np.array_equal(r.scores, e.scores)
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_topk_exact_vs_brute_force(system, queries, n_shards):
+    _, inv, li, lb, im = system
+    oracle = brute_force_topk(inv, im, queries, K)
+    eng = BooleanEngine(
+        lb, inv, li, ServeConfig(n_shards=n_shards, topk_exhaustive_cutoff=64)
+    )
+    _check(eng.query_topk(queries, K), oracle)
+    stats = eng.serving_stats()["ranked"]
+    assert stats["touched_postings"] < stats["exhaustive_postings"]
+
+
+def test_topk_k1_matches_k4_bitwise(system, queries):
+    _, inv, li, lb, im = system
+    cfg = dict(topk_exhaustive_cutoff=64)
+    r1 = BooleanEngine(lb, inv, li, ServeConfig(n_shards=1, **cfg)).query_topk(queries, K)
+    r4 = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, **cfg)).query_topk(queries, K)
+    _check(r1, r4)
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_topk_small_k(system, queries, k):
+    _, inv, li, lb, im = system
+    oracle = brute_force_topk(inv, im, queries, k)
+    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, topk_exhaustive_cutoff=0))
+    _check(eng.query_topk(queries, k), oracle)
+
+
+def test_topk_conjunctive_and_mixed(system, queries):
+    _, inv, li, lb, im = system
+    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4))
+    _check(eng.query_topk(queries, K, mode="and"),
+           brute_force_topk(inv, im, queries, K, mode="and"))
+    q2, req = zipf_disjunctions(inv.dfs, 16, n_required=1, seed=7)
+    _check(eng.query_topk(q2, K, required=req),
+           brute_force_topk(inv, im, q2, K, required=req))
+
+
+def test_topk_pruned_equals_exhaustive(system, queries):
+    _, inv, li, lb, _ = system
+    pruned = BooleanEngine(
+        lb, inv, li, ServeConfig(n_shards=1, topk_exhaustive_cutoff=0)
+    )
+    exhaustive = BooleanEngine(
+        lb, inv, li, ServeConfig(n_shards=1, topk_exhaustive_cutoff=1 << 30)
+    )
+    _check(pruned.query_topk(queries, K), exhaustive.query_topk(queries, K))
+    ps = pruned.serving_stats()["ranked"]
+    es = exhaustive.serving_stats()["ranked"]
+    assert es["exhaustive_queries"] == es["queries"]
+    assert ps["touched_postings"] < es["touched_postings"]
+
+
+def test_topk_score_kernel_path(system, queries):
+    _, inv, li, lb, im = system
+    oracle = brute_force_topk(inv, im, queries, K)
+    eng = BooleanEngine(
+        lb, inv, li,
+        ServeConfig(n_shards=1, score_kernel=True, topk_exhaustive_cutoff=1 << 30),
+    )
+    _check(eng.query_topk(queries, K), oracle)
+
+
+def test_topk_ties_break_by_doc_id():
+    """Handmade source where every doc scores identically: top-k must be the
+    k smallest doc ids, under pruning and under floors."""
+
+    class Flat:
+        ids = np.arange(0, 400, 2, np.int32)
+
+        def n(self, t):
+            return len(self.ids)
+
+        def ub(self, t):
+            return 7
+
+        def full(self, t):
+            return self.ids, np.full(len(self.ids), 7, np.int64)
+
+        def probe(self, t, cands):
+            found = np.isin(cands, self.ids)
+            return found, np.where(found, 7, 0).astype(np.int64)
+
+        def seg_ub(self, t, cands):
+            return np.full(len(cands), 7, np.int64)
+
+    src = Flat()
+    ans = topk_query(src, [0, 1], 5, exhaustive_cutoff=0)
+    assert np.array_equal(ans.ids, src.ids[:5])
+    assert np.array_equal(ans.scores, np.full(5, 14, np.int64))
+    # floor equal to the tied score excludes everything (later shards lose ties)
+    ans = topk_query(src, [0, 1], 5, floor=14, exhaustive_cutoff=0)
+    assert len(ans.ids) == 0
+    ans = topk_query(src, [0, 1], 5, floor=13, exhaustive_cutoff=0)
+    assert np.array_equal(ans.ids, src.ids[:5])
+
+
+def test_select_topk_ordering():
+    ids = np.array([5, 3, 9, 1], np.int32)
+    scores = np.array([4, 7, 7, 2], np.int64)
+    ans = select_topk(ids, scores, 3)
+    assert ans.ids.tolist() == [3, 9, 5]  # ties ascending id
+    assert ans.scores.tolist() == [7, 7, 4]
+    assert select_topk(ids, scores, 3, floor=7).ids.tolist() == []
+
+
+def test_ranked_stats_accounting(system, queries):
+    _, inv, li, lb, _ = system
+    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=1, topk_exhaustive_cutoff=0))
+    eng.query_topk(queries[:4], K)
+    s = eng.serving_stats()
+    assert s["ranked"]["queries"] == 4
+    assert s["ranked"]["shard_queries"] == 4  # K=1: pairs == queries
+    assert s["summary"]["scored_fraction"] == s["ranked"]["scored_fraction"]
+    eng.reset_stats()
+    assert "ranked" not in eng.serving_stats()
+    # K>1: 'queries' stays the facade count; shard pairs may exceed it
+    eng4 = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, topk_exhaustive_cutoff=0))
+    eng4.query_topk(queries[:4], K)
+    s4 = eng4.serving_stats()["ranked"]
+    assert s4["queries"] == 4
+    assert s4["shard_queries"] >= s4["queries"]
+
+
+def test_memory_report_includes_payloads(system):
+    _, inv, li, lb, _ = system
+    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=1))
+    eng.query_topk(np.array([[0, 1, -1]], np.int32), 3)
+    report = eng.memory_report()
+    assert report.get("payload_bits", 0) > 0
+
+
+def test_topk_without_tfs_raises(system):
+    _, inv, li, lb, _ = system
+    from dataclasses import replace
+
+    no_tf = replace(inv, tfs=None)
+    eng = BooleanEngine(lb, no_tf, li, ServeConfig(n_shards=1))
+    with pytest.raises(ValueError, match="payload"):
+        eng.query_topk(np.array([[0, 1, -1]], np.int32), 3)
+
+
+# ---------------------------------------------------------------- kernel
+def test_bm25_kernel_bit_exact():
+    from repro.kernels.bm25_score.ops import score_candidates
+    from repro.kernels.bm25_score.ref import score_ref
+
+    rng = np.random.default_rng(3)
+    for P, T in [(1, 1), (7, 3), (64, 8), (33, 5)]:
+        imp = rng.integers(0, 256, (P, T)).astype(np.int32)
+        scale = float(rng.uniform(0.001, 0.1))
+        ki, kf = score_candidates(imp, scale)
+        ri, rf = score_ref(imp, scale)
+        assert np.array_equal(ki, ri)
+        assert np.array_equal(kf.view(np.int32), rf.view(np.int32))
+    ki, kf = score_candidates(np.zeros((0, 4), np.int32), 0.5)
+    assert len(ki) == 0 and len(kf) == 0
+
+
+# ---------------------------------------------------------------- store v2
+def test_store_roundtrip_with_payloads(system, queries):
+    _, inv, li, lb, im = system
+    cfg = ServeConfig(n_shards=4, topk_exhaustive_cutoff=64)
+    eng = BooleanEngine(lb, inv, li, cfg)
+    oracle = brute_force_topk(inv, im, queries, K)
+    with tempfile.TemporaryDirectory() as d:
+        eng.save(d)
+        loaded = BooleanEngine.from_store(lb, li, cfg, d)
+        _check(loaded.query_topk(queries, K), oracle)
+        store = loaded.shards[0].tier2
+        assert store.has_payloads and store.payload_bits == 8
+        assert store.payload_scale == pytest.approx(im.scale)
+
+
+def test_store_newer_version_raises(system):
+    _, inv, *_ = system
+    store = HybridPostings.from_index(inv)
+    with tempfile.TemporaryDirectory() as d:
+        save_index(d, inv, store)
+        meta_path = os.path.join(d, "meta.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        meta["version"] = 99
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
+        with pytest.raises(UnsupportedVersionError, match="newer repro"):
+            load_index(d)
+        # and an UnsupportedVersionError is still a ValueError for old callers
+        with pytest.raises(ValueError):
+            load_index(d)
+
+
+def test_store_v1_layout_still_loads(system):
+    """A v1 directory (no payload arrays in the manifest) loads Boolean-only."""
+    _, inv, *_ = system
+    store = HybridPostings.from_index(inv)
+    with tempfile.TemporaryDirectory() as d:
+        save_index(d, inv, store)
+        meta_path = os.path.join(d, "meta.json")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        meta["version"] = 1
+        for name in ("tfs", "payload_offsets", "payloads", "ub_offsets", "seg_ubs"):
+            del meta["arrays"][name]
+            os.unlink(os.path.join(d, f"{name}.bin"))
+        del meta["payload_bits"], meta["payload_scale"]
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
+        inv2, store2 = load_index(d, verify=True)
+        assert inv2.tfs is None and not store2.has_payloads
+        t = int(np.argmax(inv.dfs))
+        assert np.array_equal(store2.postings(t), store.postings(t))
+
+
+# ---------------------------------------------------------------- queries
+def test_zipf_disjunctions_shapes(system):
+    _, inv, *_ = system
+    q, req = zipf_disjunctions(inv.dfs, 32, min_terms=2, max_terms=6, seed=1)
+    assert q.shape == (32, 6) and req.shape == q.shape
+    assert not req.any()
+    lens = (q >= 0).sum(axis=1)
+    assert lens.min() >= 2 and lens.max() <= 6
+    for row in q:
+        terms = row[row >= 0]
+        assert len(np.unique(terms)) == len(terms)
+        assert (inv.dfs[terms] > 0).all()
+    q2, req2 = zipf_disjunctions(inv.dfs, 8, n_required=2, seed=2)
+    assert (req2[:, :2] == (q2[:, :2] >= 0)).all()
+    assert not req2[:, 2:].any()
