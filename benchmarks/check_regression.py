@@ -10,6 +10,10 @@ any regresses beyond the tolerance:
   BENCH_ranked_topk.json        scored_fraction (postings MaxScore touches vs
                                 exhaustive; deterministic), latency_ratio
                                 (pruned vs exhaustive top-k, same run)
+  BENCH_serve_latency.json      trace_overhead_ratio (traced vs untraced
+                                closed-loop service time, same run),
+                                latency_ratio (open-loop p99/p50 tail
+                                amplification under Poisson arrivals)
 
 Storage/bytes metrics are deterministic (seeded corpora), so any movement is
 a real code change.  The latency metric is the guided/full *ratio* measured
@@ -52,6 +56,13 @@ METRICS = [
     # pruned vs exhaustive top-k wall clock within one run; the floor absorbs
     # scheduling noise, but pruning >1.2x slower than brute force fails
     ("BENCH_ranked_topk.json", "latency_ratio", 1.2),
+    # span tracer on vs off, interleaved passes within one run; the floor is
+    # the design budget — tracing a served batch must stay within ~5%
+    ("BENCH_serve_latency.json", "trace_overhead_ratio", 1.05),
+    # open-loop p99/p50 under Poisson arrivals at fixed utilization; queueing
+    # tails are noisy on shared runners, so the floor is generous — but a
+    # tail blowing past 25x the median signals real head-of-line blocking
+    ("BENCH_serve_latency.json", "latency_ratio", 25.0),
 ]
 
 

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV.
   guided/.. model-guided vs full-decode verify    (+ BENCH_guided_intersect.json)
   sharded/.. doc-partitioned serving vs K shards  (+ BENCH_sharded_serve.json)
   ranked/.. MaxScore top-k vs exhaustive scoring  (+ BENCH_ranked_topk.json)
+  serve_latency/.. open-loop Poisson tail latency + tracing overhead
+                                                  (+ BENCH_serve_latency.json)
   kernel/.. Pallas kernels, interpret-mode        (plumbing check)
   roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
 """
@@ -27,6 +29,7 @@ def main() -> None:
     from benchmarks.learned_postings import learned_rows
     from benchmarks.ranked_topk import ranked_rows
     from benchmarks.roofline import rows_from_file
+    from benchmarks.serve_latency import latency_rows
     from benchmarks.sharded_serve import sharded_rows
 
     print("name,us_per_call,derived")
@@ -40,6 +43,7 @@ def main() -> None:
     rows += guided_rows()
     rows += sharded_rows()
     rows += ranked_rows()
+    rows += latency_rows()
     rows += kernel_rows()
     for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
         if os.path.exists(path):

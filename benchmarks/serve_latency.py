@@ -1,0 +1,207 @@
+"""Open-loop serving latency under Poisson arrivals + tracing overhead.
+
+The ROADMAP's throughput-serving question needs tail latency, not just
+mean qps: a closed loop (issue the next query when the previous returns)
+hides queueing entirely, so this bench replays a Poisson arrival process
+against measured per-query service times — the standard open-loop replay:
+each query is executed once for its real service time, and completion
+times follow the single-server queue recurrence
+
+    start_i = max(arrival_i, completion_{i-1});  latency = completion - arrival
+
+at an offered load of UTILIZATION x the calibrated service rate.  The
+workload mixes batch-of-1 conjunctive Boolean queries with ranked top-K
+disjunctions, both checked exact against brute force during warmup.
+
+The second question this answers is what observability costs: interleaved
+closed-loop passes with the span tracer off/on give trace_overhead_ratio
+(best-of-N mean service time, traced / untraced — wall-clock but machine-
+normalized within one run, gated by check_regression.py with a 1.05 floor:
+tracing must stay within ~5% everywhere).  The probe log stays enabled for
+every pass so the ratio isolates the tracer itself.
+
+Emits BENCH_serve_latency.json:
+  open_loop.p50_ms / p99_ms / qps   queue latency percentiles at UTILIZATION
+  closed_loop.*_ms                  calibrated per-kind service means
+  trace_overhead_ratio              traced / untraced service time (gated)
+  latency_ratio                     open-loop p99/p50 — tail amplification
+                                    from queueing, machine-normalized (gated)
+plus serve_latency.trace.json (Chrome-trace of the final traced pass; open
+in ui.perfetto.dev) and serve_latency.probes.jsonl (routed-probe records).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+BENCH_PATH = "BENCH_serve_latency.json"
+TRACE_PATH = "serve_latency.trace.json"
+PROBE_PATH = "serve_latency.probes.jsonl"
+
+N_DOCS = 2048
+N_TERMS = 4000
+AVG_DOC_LEN = 60
+N_BOOLEAN = 48
+N_RANKED = 24
+TOPK = 10
+TRAIN_STEPS = 100
+N_SHARDS = 2
+UTILIZATION = 0.6  # offered load relative to the calibrated service rate
+REPS = 3  # off/on passes per tracer state (mean service, best pass taken)
+SEED = 23
+
+
+def _system():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common.config import CorpusConfig, LearnedIndexConfig, OptimizerConfig
+    from repro.core import fit_thresholds, init_membership, membership_loss
+    from repro.data.corpus import synthesize_corpus
+    from repro.data.loader import membership_batches
+    from repro.index.build import build_inverted_index
+    from repro.train import init_train_state, make_train_step
+
+    corpus = synthesize_corpus(
+        CorpusConfig(n_docs=N_DOCS, n_terms=N_TERMS, avg_doc_len=AVG_DOC_LEN, seed=SEED)
+    )
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(embed_dim=32, truncation_k=32, block_size=128)
+    params, _ = init_membership(jax.random.key(0), li_cfg, corpus.n_terms, corpus.n_docs)
+    ocfg = OptimizerConfig(lr=0.05, warmup_steps=10, total_steps=TRAIN_STEPS,
+                           weight_decay=0.0)
+    step = jax.jit(make_train_step(lambda p, b: membership_loss(p, b), ocfg))
+    st = init_train_state(params, ocfg)
+    for _, batch in zip(range(TRAIN_STEPS), membership_batches(corpus, batch_size=2048)):
+        params, st, _ = step(params, st, {k: jnp.asarray(v) for k, v in batch.items()})
+    lb = fit_thresholds(params, inv)
+    return corpus, inv, li_cfg, lb
+
+
+def _mean_service(eng, work) -> float:
+    """One closed-loop pass over the mixed workload -> mean seconds/query."""
+    t0 = time.perf_counter()
+    for kind, q in work:
+        if kind == "bool":
+            eng.query_batch([q])
+        else:
+            eng.query_topk([q], TOPK)
+    return (time.perf_counter() - t0) / len(work)
+
+
+def latency_rows(write_json: bool = True):
+    from repro.data.queries import (
+        brute_force_answers, zipf_conjunctions, zipf_disjunctions,
+    )
+    from repro.obs import ProbeLog, Tracer
+    from repro.rank.score import ImpactModel, brute_force_topk
+    from repro.serve import BooleanEngine, ServeConfig
+
+    corpus, inv, li_cfg, lb = _system()
+    probe_log = ProbeLog(PROBE_PATH if write_json else None)
+    cfg = ServeConfig(n_shards=N_SHARDS, probe_log=probe_log)
+    eng = BooleanEngine(lb, inv, li_cfg, cfg)
+    for sh in eng.shards:
+        sh.tier2  # codec selection out of every timed region
+
+    bool_q = zipf_conjunctions(inv.dfs, N_BOOLEAN, seed=SEED + 1)
+    ranked_q, _ = zipf_disjunctions(inv.dfs, N_RANKED, seed=SEED + 2)
+    rng = np.random.default_rng(SEED)
+    work = [("bool", q) for q in bool_q] + [("topk", q) for q in ranked_q]
+    work = [work[i] for i in rng.permutation(len(work))]
+
+    # ---- warmup + exactness: the engine must stay bit-exact while observed
+    res = eng.query_batch(bool_q)
+    for r, e in zip(res, brute_force_answers(corpus, bool_q)):
+        assert np.array_equal(r, e), "boolean serving must be exact"
+    im = eng.impact_model or ImpactModel.build(inv)
+    oracle = brute_force_topk(inv, im, ranked_q, TOPK)
+    for r, e in zip(eng.query_topk(ranked_q, TOPK), oracle):
+        assert np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores), \
+            "ranked serving must match brute-force BM25"
+
+    # ---- tracing overhead: interleaved off/on closed-loop passes
+    tracer = Tracer()
+    off_s, on_s = [], []
+    for _ in range(REPS):
+        eng.cfg.trace = None
+        off_s.append(_mean_service(eng, work))
+        eng.cfg.trace = tracer
+        tracer.reset()
+        on_s.append(_mean_service(eng, work))
+    eng.cfg.trace = None
+    trace_overhead = min(on_s) / min(off_s)
+
+    # ---- open loop: Poisson arrivals at UTILIZATION x the service rate
+    service = min(off_s)
+    rate = UTILIZATION / service
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(work)))
+    lat = np.zeros(len(work))
+    clock = 0.0
+    t_wall = time.perf_counter()
+    for i, (kind, q) in enumerate(work):
+        t0 = time.perf_counter()
+        if kind == "bool":
+            eng.query_batch([q])
+        else:
+            eng.query_topk([q], TOPK)
+        svc = time.perf_counter() - t0
+        clock = max(clock, arrivals[i]) + svc
+        lat[i] = clock - arrivals[i]
+    wall = time.perf_counter() - t_wall
+    p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
+
+    metrics_lat = eng.metrics.snapshot().get("latency", {})
+    traj = {
+        "workload": {
+            "n_docs": N_DOCS,
+            "n_terms": N_TERMS,
+            "n_postings": int(inv.n_postings),
+            "n_boolean": N_BOOLEAN,
+            "n_ranked": N_RANKED,
+            "topk": TOPK,
+            "n_shards": N_SHARDS,
+            "utilization": UTILIZATION,
+        },
+        "closed_loop": {
+            "service_ms": 1e3 * service,
+            "untraced_ms": [1e3 * s for s in off_s],
+            "traced_ms": [1e3 * s for s in on_s],
+        },
+        "open_loop": {
+            "offered_qps": rate,
+            "qps": len(work) / wall,
+            "p50_ms": 1e3 * p50,
+            "p90_ms": 1e3 * p90,
+            "p99_ms": 1e3 * p99,
+            "n_queries": len(work),
+        },
+        # traced/untraced mean service within one run — machine-normalized;
+        # the span tracer must cost ~nothing when off and <5% when on
+        "trace_overhead_ratio": trace_overhead,
+        # open-loop tail amplification (queueing + service variance) within
+        # one run; a generous floor absorbs scheduler noise on shared CI
+        "latency_ratio": p99 / p50,
+        "engine_histograms": metrics_lat,
+    }
+    rows = [
+        ("serve_latency/p50", 1e6 * p50, f"p99_ms={1e3 * p99:.2f}"),
+        ("serve_latency/qps", 0.0,
+         f"qps={traj['open_loop']['qps']:.1f}_offered={rate:.1f}"),
+        ("serve_latency/trace_overhead", 0.0, f"ratio={trace_overhead:.3f}"),
+    ]
+    if write_json:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(traj, f, indent=2)
+        tracer.save(TRACE_PATH)
+        probe_log.close()
+        rows.append(("serve_latency/json", 0.0,
+                     f"wrote {BENCH_PATH}+{TRACE_PATH}+{PROBE_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in latency_rows():
+        print(f"{name},{us:.1f},{derived}")

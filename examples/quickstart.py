@@ -69,7 +69,7 @@ def main():
           f"{sum(len(r) for r in conj_results)} result docs")
     print("memory report (bits):", report)
     assert "tier2_bits" in report
-    guided = eng.serving_stats()["guided"]
+    guided = eng.metrics.snapshot()["guided"]
     print(f"guided probes: {guided['probes']}, bytes touched "
           f"{guided['guided_bytes']} vs full-decode {guided['full_equiv_bytes']} "
           f"(ratio {guided['bytes_ratio']:.3f})")
@@ -86,7 +86,7 @@ def main():
         restarted = BooleanEngine.from_store(lb, li_cfg, sharded_cfg, index_dir)
         reload_results = restarted.query_batch(conj)
     assert all(np.array_equal(r, e) for r, e in zip(reload_results, conj_exact))
-    summary = restarted.serving_stats()["summary"]
+    summary = restarted.metrics.snapshot()["summary"]
     print(f"sharded round trip: {summary['n_shards']} shards served "
           f"{len(conj)} queries from the reloaded store, cache "
           f"{summary['cache_hits']}h/{summary['cache_misses']}m, "
@@ -109,10 +109,37 @@ def main():
         top.ids, top.scores, dequantize_scores(top.scores, eng.impact_model)
     ):
         print(f"  doc {int(doc):5d}  impact {int(q_score):4d}  bm25≈{f_score:.3f}")
-    rs = eng.serving_stats()["ranked"]
+    rs = eng.metrics.snapshot()["ranked"]
     print(f"ranked path scored {rs['touched_postings']} of "
           f"{rs['exhaustive_postings']} postings "
           f"(fraction {rs['scored_fraction']:.3f})")
+
+    # 10. observability: re-serve the same workloads with the span tracer and
+    # probe log on (ServeConfig(trace=..., probe_log=...) — or
+    # `repro.launch.serve --trace-out --probe-log` from the CLI), then read
+    # per-phase latency percentiles from the metrics registry and drop the
+    # Chrome-trace JSON into ui.perfetto.dev to see the query path
+    from repro.obs import ProbeLog, Tracer
+
+    tracer, plog = Tracer(), ProbeLog()  # path-less log collects in memory
+    obs_cfg = ServeConfig(algorithm="block", verified=True,
+                          trace=tracer, probe_log=plog)
+    obs_eng = BooleanEngine(lb, inv, li_cfg, obs_cfg)
+    obs_eng.query_batch(conj)
+    obs_eng.query_topk(ranked_q, 10)
+    lat = obs_eng.metrics.snapshot()["latency"]
+    for name in ("query_us", "topk_query_us"):
+        h = lat[name]
+        print(f"latency {name}: p50 {h['p50'] / 1e3:.2f} ms, "
+              f"p99 {h['p99'] / 1e3:.2f} ms over {h['count']} queries")
+    routes = sorted({r.route for r in plog.records})
+    print(f"traced {len(tracer.spans)} spans across "
+          f"{len({s.name for s in tracer.spans})} phases; "
+          f"{plog.n_records} probe records, routes {routes}")
+    with tempfile.TemporaryDirectory() as d:
+        tracer.save(f"{d}/quickstart.trace.json")
+        print(f"Chrome trace saved (open in ui.perfetto.dev): "
+              f"{len(tracer.chrome_trace()['traceEvents'])} events")
 
 
 if __name__ == "__main__":

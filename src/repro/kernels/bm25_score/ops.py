@@ -10,6 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.kernels.bm25_score.kernel import score_batch
+from repro.obs import trace
 
 _LANES = 128
 
@@ -39,11 +40,12 @@ def score_candidates(
     Pb = _bucket(P, 8)
     padded = np.zeros((Pb, Tb), np.int32)
     padded[:P, :T] = imp
-    ints, floats = score_batch(
-        jnp.asarray(padded),
-        jnp.asarray(np.float32(scale).reshape(1, 1)),
-        interpret=interpret,
-    )
+    with trace.span("kernel.bm25_score", candidates=int(Pb), terms=int(Tb)):
+        ints, floats = score_batch(
+            jnp.asarray(padded),
+            jnp.asarray(np.float32(scale).reshape(1, 1)),
+            interpret=interpret,
+        )
     return (
         np.asarray(ints).reshape(-1)[:P],
         np.asarray(floats).reshape(-1)[:P],

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.guided_search.kernel import probe_batch
+from repro.obs import trace
 
 _LANES = 128
 MAX_W = 1024  # widest window the kernel pads to; wider brackets go to host
@@ -77,16 +78,18 @@ def probe_windows(
         out[:P] = np.asarray(a, dtype)
         return jnp.asarray(out.reshape(Pb, 1))
 
-    kf, lt = probe_batch(
-        colv(tm.starts[seg], np.int32),
-        colv(tm.bases[seg], np.int32),
-        colv(tm.slopes[seg], np.float32),
-        colv(r_lo, np.int32),
-        colv(lens, np.int32),
-        colv(d, np.int32),
-        jnp.asarray(corr),
-        interpret=interpret,
-    )
+    with trace.span("kernel.guided_search", probes=int(Pb), window=int(W),
+                    bytes=int(touched)):
+        kf, lt = probe_batch(
+            colv(tm.starts[seg], np.int32),
+            colv(tm.bases[seg], np.int32),
+            colv(tm.slopes[seg], np.float32),
+            colv(r_lo, np.int32),
+            colv(lens, np.int32),
+            colv(d, np.int32),
+            jnp.asarray(corr),
+            interpret=interpret,
+        )
     kf = np.asarray(kf).reshape(-1)[:P].astype(bool)
     lt = np.asarray(lt).reshape(-1)[:P].astype(np.int64)
     narrow = lens > 0

@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.kernels.plm_decode.kernel import decode_batch
 from repro.kernels.plm_decode.ref import SENTINEL
+from repro.obs import trace
 from repro.postings.plm import parse_stream
 
 _SENTINEL = int(SENTINEL)
@@ -39,15 +40,16 @@ def decode_lists(
         bases[row, :s] = ba.astype(np.int32)
         slopes[row, :s] = sl
         corr[row, : len(co)] = co.astype(np.int32)
-    ids = np.asarray(
-        decode_batch(
-            jnp.asarray(starts),
-            jnp.asarray(bases),
-            jnp.asarray(slopes),
-            jnp.asarray(corr),
-            interpret=interpret,
+    with trace.span("kernel.plm_decode", lists=int(B), ranks=int(R)):
+        ids = np.asarray(
+            decode_batch(
+                jnp.asarray(starts),
+                jnp.asarray(bases),
+                jnp.asarray(slopes),
+                jnp.asarray(corr),
+                interpret=interpret,
+            )
         )
-    )
     for row, i in enumerate(nonempty):
         out[i] = ids[row, : lens[i]].astype(np.int32)
     return out

@@ -12,9 +12,15 @@ restart needs no re-encoding.
 --topk K additionally serves a ranked (BM25 top-K) disjunctive batch over
 the tier-2 payload streams, checked bit-exact against brute-force scoring.
 
+--trace-out FILE records every served batch as Chrome-trace JSON (open in
+chrome://tracing or https://ui.perfetto.dev); --probe-log FILE streams one
+JSONL record per routed probe with its route decision and bytes touched.
+
   PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --index-dir /tmp/idx
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10
+  PYTHONPATH=src python -m repro.launch.serve --trace-out serve.trace.json \\
+      --probe-log probes.jsonl
 """
 from __future__ import annotations
 
@@ -31,6 +37,7 @@ from repro.data.corpus import synthesize_corpus
 from repro.data.loader import membership_batches
 from repro.data.queries import brute_force_answers, sample_queries, zipf_disjunctions
 from repro.index.build import build_inverted_index
+from repro.obs import ProbeLog, Tracer
 from repro.serve import BooleanEngine, ServeConfig
 from repro.train import init_train_state, make_train_step
 
@@ -75,6 +82,10 @@ def main():
     ap.add_argument("--topk", type=int, default=10,
                     help="also serve a ranked top-K disjunctive batch "
                          "(0 disables the ranked path)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of every served batch here")
+    ap.add_argument("--probe-log", default=None,
+                    help="stream per-(query, term, shard) probe records (JSONL)")
     args = ap.parse_args()
 
     corpus = synthesize_corpus(
@@ -86,8 +97,11 @@ def main():
     )
     params = train_membership(corpus, inv, li_cfg, steps=args.train_steps)
     lb = fit_thresholds(params, inv)
+    tracer = Tracer() if args.trace_out else None
+    probe_log = ProbeLog(args.probe_log) if args.probe_log else None
     cfg = ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
-                      use_kernel=args.use_kernel, n_shards=args.shards)
+                      use_kernel=args.use_kernel, n_shards=args.shards,
+                      trace=tracer, probe_log=probe_log)
     eng = BooleanEngine(lb, inv, li_cfg, cfg)
     if args.index_dir:
         t0 = time.time()
@@ -112,7 +126,7 @@ def main():
     if not args.no_verify:
         assert n_exact == args.queries, "verified mode must be exact"
         print("[serve] verified mode: all results exact ✓")
-    s = eng.serving_stats()["summary"]
+    s = eng.metrics.snapshot()["summary"]
     print(f"[serve] summary: {s['n_shards']} shards, cache "
           f"{s['cache_hits']}h/{s['cache_misses']}m/{s['cache_evictions']}e, "
           f"probe bytes {s['probe_bytes']} (ratio {s['bytes_ratio']:.3f})")
@@ -130,12 +144,26 @@ def main():
             np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores)
             for r, e in zip(ranked, oracle)
         )
-        rs = eng.serving_stats()["ranked"]
+        rs = eng.metrics.snapshot()["ranked"]
         print(f"[serve] ranked top-{args.topk}: {args.queries} OR queries, "
               f"{dt:.2f} ms/query, exact-vs-BM25-brute-force={ok}, "
               f"scored {rs['touched_postings']}/{rs['exhaustive_postings']} "
               f"postings (fraction {rs['scored_fraction']:.3f})")
         assert ok, "ranked serving must match brute-force BM25"
+
+    lat = eng.metrics.snapshot().get("latency", {})
+    for name in ("query_us", "topk_query_us"):
+        h = lat.get(name)
+        if h:
+            print(f"[serve] latency {name}: p50 {h['p50'] / 1e3:.2f} ms, "
+                  f"p99 {h['p99'] / 1e3:.2f} ms over {h['count']} queries")
+    if probe_log is not None:
+        probe_log.close()
+        print(f"[serve] probe log written to {args.probe_log}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[serve] trace written to {args.trace_out} "
+              f"({len(tracer.spans)} spans) — open in ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Observability for the serving stack: tracing, metrics, probe logging.
+
+  trace.py     nestable span tracer, Chrome-trace/Perfetto JSON export,
+               ambient activation so deep layers need no tracer plumbing
+  metrics.py   counters / gauges / fixed-bucket histograms behind one
+               Registry.snapshot() / Registry.reset() pair
+  probelog.py  per-(query, term, shard) routed-probe JSONL records — the
+               training data for the learned guided-vs-decode cost model
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry
+from repro.obs.probelog import ProbeLog, ProbeRecord
+from repro.obs.trace import NULL_SPAN, Span, Tracer, activate, current, span
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "NULL_SPAN",
+    "ProbeLog",
+    "ProbeRecord",
+    "Registry",
+    "Span",
+    "Tracer",
+    "activate",
+    "current",
+    "span",
+]

@@ -1,0 +1,145 @@
+"""Structured probe-trace logging: one JSONL record per routed term.
+
+The learned-serving-policies roadmap item wants to *learn* the
+guided-vs-decode cost model instead of hand-tuning it; its training data is
+exactly what the router sees plus what the probe actually cost.  Every time
+``GuidedPostings`` routes a (query, term, shard) probe, it logs
+
+  query / shard       ambient ids (set by the executor around each query)
+  term, n_postings    the term and its local list length
+  route               'guided' | 'decode' | 'fallback' | 'empty'
+                      (decode = learned codec sent to full decode by the
+                      cost model or planner hint; fallback = classical codec)
+  n_cands / n_found   candidate-set size in and matches out
+  eps_window          the model's expected ε-window width in ranks — the
+                      feature the current hand-tuned router thresholds on
+  bytes               stream bytes this probe actually touched
+  wall_us             host wall clock of the probe
+
+Records append as JSON lines (order = execution order); ``ProbeLog`` is
+thread-safe, the ambient (query, shard) context is thread-local so the
+shard fan-out pool attributes records correctly, and a path-less ProbeLog
+collects records in memory (tests, notebooks).  ``read()`` round-trips a
+file back into ``ProbeRecord``s.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import asdict, dataclass
+
+
+@dataclass
+class ProbeRecord:
+    """One routed probe: the cost-model features and the measured outcome."""
+
+    query: int
+    shard: int
+    term: int
+    route: str
+    n_cands: int
+    n_found: int
+    n_postings: int
+    eps_window: float
+    bytes: int
+    wall_us: float
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, line: str) -> "ProbeRecord":
+        return cls(**json.loads(line))
+
+
+class _Context:
+    __slots__ = ("_log", "_query", "_shard", "_prev")
+
+    def __init__(self, log: "ProbeLog", query: int, shard: int):
+        self._log = log
+        self._query = query
+        self._shard = shard
+
+    def __enter__(self) -> "_Context":
+        local = self._log._local
+        self._prev = getattr(local, "ctx", (-1, -1))
+        local.ctx = (self._query, self._shard)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._log._local.ctx = self._prev
+        return False
+
+
+class ProbeLog:
+    """JSONL probe-trace sink with ambient (query, shard) attribution."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._fh = open(path, "w") if path else None
+        self.records: list[ProbeRecord] | None = [] if path is None else None
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self.n_records = 0
+
+    # ------------------------------------------------------------- context
+    def context(self, *, query: int = -1, shard: int = -1) -> _Context:
+        """Attribute records logged inside the with-block to (query, shard)."""
+        return _Context(self, query, shard)
+
+    # ------------------------------------------------------------- write
+    def log(
+        self,
+        term: int,
+        route: str,
+        *,
+        n_cands: int,
+        n_found: int,
+        n_postings: int,
+        eps_window: float,
+        bytes: int,
+        wall_us: float,
+    ) -> None:
+        query, shard = getattr(self._local, "ctx", (-1, -1))
+        rec = ProbeRecord(
+            query=int(query),
+            shard=int(shard),
+            term=int(term),
+            route=route,
+            n_cands=int(n_cands),
+            n_found=int(n_found),
+            n_postings=int(n_postings),
+            eps_window=float(eps_window),
+            bytes=int(bytes),
+            wall_us=float(wall_us),
+        )
+        with self._lock:
+            self.n_records += 1
+            if self._fh is not None:
+                self._fh.write(rec.to_json() + "\n")
+            else:
+                self.records.append(rec)
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self) -> "ProbeLog":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # ------------------------------------------------------------- read
+    @staticmethod
+    def read(path: str) -> list[ProbeRecord]:
+        with open(path) as f:
+            return [ProbeRecord.from_json(line) for line in f if line.strip()]

@@ -35,6 +35,7 @@ guided probe touches against what a full decode would have read.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -42,6 +43,7 @@ import numpy as np
 
 from repro.index.compress import CODECS, unpack_bits_at
 from repro.index.intersect import gallop_membership
+from repro.obs import trace
 from repro.postings.hybrid import HybridPostings
 from repro.postings.plm import parse_segments
 
@@ -222,8 +224,10 @@ class GuidedPostings:
         *,
         fallback: Callable[[int], np.ndarray] | None = None,
         use_kernel: bool = False,
+        probe_log=None,  # obs.probelog.ProbeLog: one record per routed term
     ):
         self.store = store
+        self.probe_log = probe_log
         if fallback is None:
             cache: dict[int, np.ndarray] = {}
 
@@ -261,7 +265,13 @@ class GuidedPostings:
     def _route(
         self, t: int, n_cands: int, hint: str | None = None
     ) -> tuple[str, TermModel | None]:
-        """Shared probe preamble: stats + 'empty'|'fallback'|'guided' routing.
+        """Shared probe preamble: stats + route decision.
+
+        Routes are 'empty' | 'fallback' (classical codec, full decode) |
+        'decode' (learned codec sent to full decode by the cost model or a
+        planner hint) | 'guided' (ε-window probes).  The TermModel comes
+        back for both learned routes so callers can log the ε-window
+        feature the router thresholds on.
 
         ``hint`` is a planner override ('guided' | 'decode'): the sharded
         planner runs the same cost model at plan time with its candidate
@@ -281,7 +291,7 @@ class GuidedPostings:
             # cost model: the ε-windows of this many probes would decode more
             # correction bytes than the whole list — full decode is cheaper
             self.stats.routed_terms += 1
-            return "fallback", None
+            return "decode", tm
         self.stats.guided_terms += 1
         return "guided", tm
 
@@ -303,6 +313,20 @@ class GuidedPostings:
             return found, rank
         return self._probe_host(tm, cands)
 
+    def _log_probe(
+        self, t: int, route: str, tm: TermModel | None,
+        n_cands: int, n_found: int, bytes_before: int, t0_ns: int,
+    ) -> None:
+        self.probe_log.log(
+            t, route,
+            n_cands=n_cands,
+            n_found=n_found,
+            n_postings=int(self.store.lens[t]),
+            eps_window=tm.avg_window if tm is not None else 0.0,
+            bytes=self.stats.guided_bytes() - bytes_before,
+            wall_us=(time.perf_counter_ns() - t0_ns) / 1e3,
+        )
+
     def probe(
         self, t: int, cands: np.ndarray, *, route: str | None = None
     ) -> tuple[np.ndarray, np.ndarray]:
@@ -312,15 +336,24 @@ class GuidedPostings:
         whether or not d is present.
         """
         cands = np.asarray(cands)
+        log = self.probe_log
+        t0 = time.perf_counter_ns() if log is not None else 0
+        b0 = self.stats.guided_bytes() if log is not None else 0
         route, tm = self._route(t, len(cands), route)
-        if route == "empty":
-            return np.zeros(len(cands), bool), np.zeros(len(cands), np.int64)
-        if route == "fallback":
-            p = self._fallback_list(t)
-            sel = np.searchsorted(p, cands)
-            found = (sel < len(p)) & (p[np.minimum(sel, len(p) - 1)] == cands)
-            return found, sel.astype(np.int64)
-        return self._probe_guided(tm, cands)
+        with trace.span("probe.term", term=int(t), route=route, n_cands=len(cands)):
+            if route == "empty":
+                found = np.zeros(len(cands), bool)
+                rank = np.zeros(len(cands), np.int64)
+            elif route in ("fallback", "decode"):
+                p = self._fallback_list(t)
+                sel = np.searchsorted(p, cands)
+                found = (sel < len(p)) & (p[np.minimum(sel, len(p) - 1)] == cands)
+                rank = sel.astype(np.int64)
+            else:
+                found, rank = self._probe_guided(tm, cands)
+        if log is not None:
+            self._log_probe(t, route, tm, len(cands), int(found.sum()), b0, t0)
+        return found, rank
 
     def _probe_host(self, tm: TermModel, cands: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         d = np.asarray(cands, np.int64)
@@ -343,12 +376,20 @@ class GuidedPostings:
         verification loop produces).  Fallback terms skip rank computation
         and gallop instead of binary-searching every candidate."""
         cands = np.asarray(cands)
+        log = self.probe_log
+        t0 = time.perf_counter_ns() if log is not None else 0
+        b0 = self.stats.guided_bytes() if log is not None else 0
         route, tm = self._route(t, len(cands), route)
-        if route == "empty":
-            return np.zeros(len(cands), bool)
-        if route == "fallback":
-            return gallop_membership(self._fallback_list(t), cands)
-        return self._probe_guided(tm, cands)[0]
+        with trace.span("probe.term", term=int(t), route=route, n_cands=len(cands)):
+            if route == "empty":
+                found = np.zeros(len(cands), bool)
+            elif route in ("fallback", "decode"):
+                found = gallop_membership(self._fallback_list(t), cands)
+            else:
+                found = self._probe_guided(tm, cands)[0]
+        if log is not None:
+            self._log_probe(t, route, tm, len(cands), int(found.sum()), b0, t0)
+        return found
 
     def rank(self, t: int, cands: np.ndarray) -> np.ndarray:
         return self.probe(t, cands)[1]

@@ -38,6 +38,7 @@ from typing import Callable, Protocol, Sequence
 
 import numpy as np
 
+from repro.obs import trace
 from repro.rank.score import TopKResult, select_topk
 
 
@@ -170,29 +171,31 @@ def topk_query(
     ubs = np.array([src.ub(t) for t in optional], np.int64)
     suffix = np.concatenate([np.cumsum(ubs[::-1])[::-1], [0]])
     theta = _kth_partial(partial, k)
-    for j, t in enumerate(optional):
-        alive_min = max(floor + 1, theta)
-        if accepting_new and suffix[j] >= alive_min:
-            ids, q = src.full(t)
-            stats.scored_postings += len(ids)
-            cands, partial = _merge_add(cands, partial, ids, q)
-        else:
-            accepting_new = False
-            potential = partial + suffix[j]
-            alive = potential >= alive_min
-            cands, partial = cands[alive], partial[alive]
-            if len(cands) == 0:
-                break
-            # block-max refinement: this term's contribution is bounded by
-            # the candidate's *segment* max, not the whole-list max
-            bound = partial + suffix[j + 1] + src.seg_ub(t, cands)
-            maybe = bound >= alive_min
-            if maybe.any():
-                sel = np.nonzero(maybe)[0]
-                found, q = src.probe(t, cands[sel])
-                stats.probed_postings += len(sel)
-                partial[sel[found]] += q[found]
-        theta = max(theta, _kth_partial(partial, k))
+    with trace.span("score.maxscore", terms=len(optional), k=int(k)) as sp:
+        for j, t in enumerate(optional):
+            alive_min = max(floor + 1, theta)
+            if accepting_new and suffix[j] >= alive_min:
+                ids, q = src.full(t)
+                stats.scored_postings += len(ids)
+                cands, partial = _merge_add(cands, partial, ids, q)
+            else:
+                accepting_new = False
+                potential = partial + suffix[j]
+                alive = potential >= alive_min
+                cands, partial = cands[alive], partial[alive]
+                if len(cands) == 0:
+                    break
+                # block-max refinement: this term's contribution is bounded by
+                # the candidate's *segment* max, not the whole-list max
+                bound = partial + suffix[j + 1] + src.seg_ub(t, cands)
+                maybe = bound >= alive_min
+                if maybe.any():
+                    sel = np.nonzero(maybe)[0]
+                    found, q = src.probe(t, cands[sel])
+                    stats.probed_postings += len(sel)
+                    partial[sel[found]] += q[found]
+            theta = max(theta, _kth_partial(partial, k))
+        sp.set(candidates=int(len(cands)))
     return select_topk(cands, partial, k, floor)
 
 
@@ -209,18 +212,20 @@ def _exhaustive(
     With a ``batch_scorer`` the (candidate, term) impact matrix reduces on
     the Pallas bm25_score kernel; integer sums make both paths bit-equal.
     """
-    decoded = [src.full(t) for t in terms]
-    stats.scored_postings += sum(len(ids) for ids, _ in decoded)
-    uids = np.unique(np.concatenate([ids for ids, _ in decoded]))
-    if len(uids) == 0:
-        return _EMPTY
-    if batch_scorer is None:
-        scores = np.zeros(len(uids), np.int64)
-        for ids, q in decoded:
-            scores[np.searchsorted(uids, ids)] += q
-    else:
-        imp = np.zeros((len(uids), len(terms)), np.int32)
-        for j, (ids, q) in enumerate(decoded):
-            imp[np.searchsorted(uids, ids), j] = q
-        scores = np.asarray(batch_scorer(imp), np.int64)
+    with trace.span("score.exhaustive", terms=len(tuple(terms)), k=int(k)) as sp:
+        decoded = [src.full(t) for t in terms]
+        stats.scored_postings += sum(len(ids) for ids, _ in decoded)
+        uids = np.unique(np.concatenate([ids for ids, _ in decoded]))
+        sp.set(candidates=int(len(uids)))
+        if len(uids) == 0:
+            return _EMPTY
+        if batch_scorer is None:
+            scores = np.zeros(len(uids), np.int64)
+            for ids, q in decoded:
+                scores[np.searchsorted(uids, ids)] += q
+        else:
+            imp = np.zeros((len(uids), len(terms)), np.int32)
+            for j, (ids, q) in enumerate(decoded):
+                imp[np.searchsorted(uids, ids), j] = q
+            scores = np.asarray(batch_scorer(imp), np.int64)
     return select_topk(uids.astype(np.int32), scores, k, floor)

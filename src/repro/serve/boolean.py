@@ -33,6 +33,8 @@ BM25 oracle (rank.score.brute_force_topk).
 """
 from __future__ import annotations
 
+import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
@@ -41,6 +43,10 @@ import numpy as np
 from repro.common.config import LearnedIndexConfig
 from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex
+from repro.obs import trace
+from repro.obs.metrics import Registry
+from repro.obs.probelog import ProbeLog
+from repro.obs.trace import NULL_SPAN, Tracer
 from repro.postings.search import ProbeStats
 from repro.rank.score import BM25Params, ImpactModel, TopKResult, select_topk
 from repro.rank.topk import RankedStats
@@ -72,6 +78,10 @@ class ServeConfig:
     # and score exhaustively (still exact); 0 forces pruning everywhere
     topk_exhaustive_cutoff: int = 2048
     score_kernel: bool = False  # batch exhaustive scoring on the Pallas kernel
+    # ---- observability (repro.obs); all opt-in, None costs ~nothing
+    trace: Tracer | None = None  # span tracer, active for every served batch
+    metrics: Registry | None = None  # facade registry (engine creates one if None)
+    probe_log: ProbeLog | None = None  # per-(query, term, shard) routed-probe JSONL
 
 
 class BooleanEngine:
@@ -118,12 +128,19 @@ class BooleanEngine:
             ]
         self._ranges = [r for r, _ in shards]
         self._shards = [s for _, s in shards]
-        self._ranked_queries = 0  # facade-level count (shards count pairs)
         active = self.shards
+        for sid, sh in enumerate(active):
+            sh.shard_id = sid
         if inv is not None:
             self._global_dfs = inv.dfs
         else:
             self._global_dfs = sum((s.local_dfs for s in active), start=0)
+        # one registry per facade: primitives (query counters, per-phase
+        # latency histograms) plus collectors aggregating the shards
+        self.metrics = self.cfg.metrics if self.cfg.metrics is not None else Registry()
+        self._ranked_queries = self.metrics.counter("queries.ranked")
+        self._boolean_queries = self.metrics.counter("queries.boolean")
+        self._register_collectors()
         self._pool = (
             ThreadPoolExecutor(
                 max_workers=min(self.cfg.shard_workers, len(active)),
@@ -222,6 +239,11 @@ class BooleanEngine:
         bitmap = self._execute(q)
         return [unpack_row(bitmap[i], self.n_docs) for i in range(q.shape[0])]
 
+    def _observe_us(self, name: str, t0_ns: int) -> None:
+        self.metrics.histogram("latency." + name).observe(
+            (time.perf_counter_ns() - t0_ns) / 1e3
+        )
+
     def query_batch_bitmap(self, queries: np.ndarray) -> np.ndarray:
         """(Q, T) padded term ids -> (Q, ceil(n_docs/32)) packed uint32 bitmap."""
         q = self._padded(queries)
@@ -252,33 +274,43 @@ class BooleanEngine:
         empty = TopKResult(ids=np.zeros(0, np.int32), scores=np.zeros(0, np.int64))
         if k <= 0:
             return [empty for _ in range(q.shape[0])]
-        qplans = plan_ranked(q, self._global_dfs, mode=mode, required=required)
-        self._ranked_queries += len(qplans)
+        self._ranked_queries.inc(int(q.shape[0]))
+        log = self.cfg.probe_log
         active = self.shards
-        runs = [ranked_run_mask(qplans, sh.local_dfs) for sh in active]
         out: list[TopKResult] = []
-        for i, qp in enumerate(qplans):
-            if qp.dead:
-                out.append(empty)
-                continue
-            heap = empty
-            # ascending doc ranges + ascending-id tie break make the floor a
-            # strict bar: a later shard's tie can never displace the heap
-            for sh, run in zip(active, runs):
-                if not run[i]:
+        with trace.activate(self.cfg.trace), \
+                trace.span("serve.topk_batch", queries=int(q.shape[0]), k=int(k)):
+            with trace.span("serve.plan"):
+                qplans = plan_ranked(q, self._global_dfs, mode=mode, required=required)
+                runs = [ranked_run_mask(qplans, sh.local_dfs) for sh in active]
+            for i, qp in enumerate(qplans):
+                if qp.dead:
+                    out.append(empty)
                     continue
-                floor = int(heap.scores[k - 1]) if len(heap.scores) == k else 0
-                part = sh.query_topk_local(
-                    qp.terms, k, required=qp.required, floor=floor
-                )
-                if len(part.ids) == 0:
-                    continue
-                heap = select_topk(
-                    np.concatenate([heap.ids, part.ids]),
-                    np.concatenate([heap.scores, part.scores]),
-                    k,
-                )
-            out.append(heap)
+                t_query = time.perf_counter_ns()
+                heap = empty
+                # ascending doc ranges + ascending-id tie break make the floor
+                # a strict bar: a later shard's tie can never displace the heap
+                for sh, run in zip(active, runs):
+                    if not run[i]:
+                        continue
+                    floor = int(heap.scores[k - 1]) if len(heap.scores) == k else 0
+                    ctx = (log.context(query=i, shard=sh.shard_id)
+                           if log is not None else NULL_SPAN)
+                    with ctx:
+                        part = sh.query_topk_local(
+                            qp.terms, k, required=qp.required, floor=floor
+                        )
+                    if len(part.ids) == 0:
+                        continue
+                    with trace.span("serve.heap_merge", query=i, shard=sh.shard_id):
+                        heap = select_topk(
+                            np.concatenate([heap.ids, part.ids]),
+                            np.concatenate([heap.scores, part.scores]),
+                            k,
+                        )
+                self._observe_us("topk_query_us", t_query)
+                out.append(heap)
         return out
 
     def _padded(self, queries: np.ndarray) -> np.ndarray:
@@ -301,19 +333,55 @@ class BooleanEngine:
         ServeConfig note on the GIL) and on the calling thread otherwise.
         """
         active = self.shards
-        plan = plan_batch(q, self._global_dfs, active, verified=self.cfg.verified)
-        masks = [
-            sh.candidate_mask(q) if (sh.n_docs > 0 and sp.run.any()) else None
-            for sh, sp in zip(active, plan.shard_plans)
-        ]
-        if self._pool is None:
-            parts = [sh.execute(q, sp, plan.qplans, mask=m)
-                     for sh, sp, m in zip(active, plan.shard_plans, masks)]
-        else:
-            futs = [self._pool.submit(sh.execute, q, sp, plan.qplans, mask=m)
-                    for sh, sp, m in zip(active, plan.shard_plans, masks)]
-            parts = [f.result() for f in futs]
-        return self._merge(parts, active)
+        t_batch = time.perf_counter_ns()
+        self._boolean_queries.inc(int(q.shape[0]))
+        with trace.activate(self.cfg.trace), \
+                trace.span("serve.batch", queries=int(q.shape[0]),
+                           shards=len(active)):
+            t0 = time.perf_counter_ns()
+            with trace.span("serve.plan"):
+                plan = plan_batch(q, self._global_dfs, active,
+                                  verified=self.cfg.verified)
+            self._observe_us("plan_us", t0)
+            t0 = time.perf_counter_ns()
+            masks = []
+            for sh, sp in zip(active, plan.shard_plans):
+                if sh.n_docs > 0 and sp.run.any():
+                    with trace.span("serve.candidate_mask", shard=sh.shard_id):
+                        masks.append(sh.candidate_mask(q))
+                else:
+                    masks.append(None)
+            self._observe_us("mask_us", t0)
+            t0 = time.perf_counter_ns()
+            tr = trace.current()  # re-activated inside pool workers
+
+            def probe_phase(sh, sp, m):
+                with trace.activate(tr), \
+                        trace.span("serve.probe_phase", shard=sh.shard_id):
+                    return sh.execute(q, sp, plan.qplans, mask=m)
+
+            if self._pool is None:
+                parts = [probe_phase(sh, sp, m)
+                         for sh, sp, m in zip(active, plan.shard_plans, masks)]
+            else:
+                futs = [self._pool.submit(probe_phase, sh, sp, m)
+                        for sh, sp, m in zip(active, plan.shard_plans, masks)]
+                parts = [f.result() for f in futs]
+            self._observe_us("probe_us", t0)
+            t0 = time.perf_counter_ns()
+            with trace.span("serve.merge"):
+                out = self._merge(parts, active)
+            self._observe_us("merge_us", t0)
+        # per-query latency at batch granularity: each query is charged the
+        # batch mean, so histogram counts tally queries and percentiles
+        # weight batches by their size (batch-of-1 harnesses record the true
+        # per-query wall)
+        n_q = max(int(q.shape[0]), 1)
+        us = (time.perf_counter_ns() - t_batch) / 1e3 / n_q
+        hist = self.metrics.histogram("latency.query_us")
+        for _ in range(n_q):
+            hist.observe(us)
+        return out
 
     def _merge(self, parts: list[np.ndarray], active: list[ShardEngine]) -> np.ndarray:
         """Word-copy each shard's packed bitmap at its doc-id offset (shard
@@ -350,55 +418,86 @@ class BooleanEngine:
             report["payload_bits"] = payload_bits
         return report
 
-    def serving_stats(self) -> dict[str, dict]:
-        """Per-shard hot-path accounting plus aggregated top-level counters.
+    def _register_collectors(self) -> None:
+        """Aggregating collectors over the shards, all read through one
+        ``Registry.snapshot()`` (the keys serving_stats always reported)."""
+        reg = self.metrics
+        reg.register("decode_cache", self._collect_cache)
+        reg.register(
+            "shards",
+            lambda: [sh.serving_stats() for sh in self.shards],
+            reset=lambda: [sh.reset_stats() for sh in self.shards],
+        )
+        reg.register("guided", self._collect_guided)
+        reg.register("ranked", self._collect_ranked)
+        reg.register("summary", self._collect_summary)
 
-        'decode_cache' and 'guided' keep the single-engine shapes (counters
-        summed across shards, ratios recomputed); 'summary' is the one-number
-        view benchmarks report; 'shards' carries the raw per-shard stats.
-        """
-        per_shard = [sh.serving_stats() for sh in self.shards]
-        cache_keys = ("entries", "cost_bytes", "budget_bytes", "hits", "misses", "evictions")
-        cache = {k: sum(s["decode_cache"][k] for s in per_shard) for k in cache_keys}
-        stats: dict[str, dict] = {"decode_cache": cache, "shards": per_shard}
-        guided = [s["guided"] for s in per_shard if "guided" in s]
-        if guided:
-            agg = ProbeStats(**{
-                f: sum(int(g[f]) for g in guided)
-                for f in ("probes", "guided_terms", "fallback_terms", "routed_terms",
-                          "window_bytes", "metadata_bytes", "fallback_bytes",
-                          "full_equiv_bytes")
-            })
-            stats["guided"] = agg.as_dict()
-        ranked = [s["ranked"] for s in per_shard if "ranked" in s]
-        if ranked:
-            agg = RankedStats(**{
-                f: sum(int(r[f]) for r in ranked)
-                for f in ("queries", "exhaustive_queries", "scored_postings",
-                          "probed_postings", "exhaustive_postings")
-            }).as_dict()
-            # shard counters tally (query, shard) pairs; report the facade's
-            # query count on top so per-query averages come out right
-            agg["shard_queries"] = agg.pop("queries")
-            agg["queries"] = self._ranked_queries
-            stats["ranked"] = agg
-        stats["summary"] = {
+    def _collect_cache(self) -> dict[str, int]:
+        keys = ("entries", "cost_bytes", "budget_bytes", "hits", "misses", "evictions")
+        per = [sh._decode_cache.stats() for sh in self.shards]
+        return {k: sum(s[k] for s in per) for k in keys}
+
+    def _collect_guided(self) -> dict | None:
+        """'guided' keeps the single-engine shape: counters summed across
+        shards, ratios recomputed by ProbeStats.as_dict."""
+        per = [sh._guided.stats for sh in self.shards if sh._guided is not None]
+        if not per:
+            return None
+        return ProbeStats(**{
+            f: sum(int(getattr(g, f)) for g in per)
+            for f in ("probes", "guided_terms", "fallback_terms", "routed_terms",
+                      "window_bytes", "metadata_bytes", "fallback_bytes",
+                      "full_equiv_bytes")
+        }).as_dict()
+
+    def _collect_ranked(self) -> dict | None:
+        per = [sh.ranked_stats for sh in self.shards if sh.ranked_stats.queries]
+        if not per:
+            return None
+        agg = RankedStats(**{
+            f: sum(int(getattr(r, f)) for r in per)
+            for f in ("queries", "exhaustive_queries", "scored_postings",
+                      "probed_postings", "exhaustive_postings")
+        }).as_dict()
+        # shard counters tally (query, shard) pairs; report the facade's
+        # query count on top so per-query averages come out right
+        agg["shard_queries"] = agg.pop("queries")
+        agg["queries"] = self._ranked_queries.value
+        return agg
+
+    def _collect_summary(self) -> dict:
+        """The one-number view benchmarks report (stable legacy keys)."""
+        cache = self._collect_cache()
+        guided = self._collect_guided()
+        ranked = self._collect_ranked()
+        return {
             "n_shards": len(self.shards),
             "cache_hits": cache["hits"],
             "cache_misses": cache["misses"],
             "cache_evictions": cache["evictions"],
-            "probe_bytes": stats["guided"]["guided_bytes"] if guided else 0,
-            "bytes_ratio": stats["guided"]["bytes_ratio"] if guided else 0.0,
-            "scored_fraction": stats["ranked"]["scored_fraction"] if ranked else 0.0,
+            "probe_bytes": guided["guided_bytes"] if guided else 0,
+            "bytes_ratio": guided["bytes_ratio"] if guided else 0.0,
+            "scored_fraction": ranked["scored_fraction"] if ranked else 0.0,
         }
-        return stats
+
+    def serving_stats(self) -> dict[str, dict]:
+        """Deprecated: one snapshot of the facade metrics registry.
+
+        Kept as a thin wrapper so existing callers see the same shape
+        ('decode_cache', 'shards', 'guided', 'ranked', 'summary' — plus the
+        registry's own 'queries' counters and 'latency' histograms).  New
+        code should read ``engine.metrics.snapshot()`` directly.
+        """
+        warnings.warn(
+            "serving_stats() is deprecated; read engine.metrics.snapshot()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.metrics.snapshot()
 
     def reset_stats(self) -> None:
-        """Zero every shard's probe + cache accounting window (cached decodes
-        stay resident, so the next pass measures warm serving)."""
-        for sh in self.shards:
-            if sh._guided is not None:
-                sh._guided.reset_stats()
-            sh._decode_cache.reset_counters()
-            sh.ranked_stats = RankedStats()
-        self._ranked_queries = 0
+        """Zero every accounting window through the metrics registry: facade
+        counters/histograms reset, and each shard's public reset_stats()
+        zeroes its own guided/ranked/cache state (cached decodes stay
+        resident, so the next pass measures warm serving)."""
+        self.metrics.reset()

@@ -34,6 +34,9 @@ from repro.core import algorithms as alg
 from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex, slice_index
 from repro.index.intersect import gallop_membership
+from repro.obs import trace
+from repro.obs.metrics import Registry
+from repro.obs.trace import NULL_SPAN
 from repro.rank.score import TopKResult
 from repro.rank.topk import RankedStats, topk_query
 from repro.serve.cache import CostLRU
@@ -119,6 +122,7 @@ class ShardEngine:
         self.lb = lb
         self.lo = lo
         self.hi = inv.n_docs if hi is None else hi
+        self.shard_id = 0  # position in the facade's shard list (it sets this)
         self._tier2 = tier2 if cfg.postings_store == "hybrid" else None
         self._guided = None  # lazy GuidedPostings over tier-2
         self._impact_model = impact_model
@@ -194,7 +198,9 @@ class ShardEngine:
                 from repro.postings import GuidedPostings
 
                 self._guided = GuidedPostings(
-                    store, fallback=self._postings, use_kernel=self.cfg.guided_kernel
+                    store, fallback=self._postings,
+                    use_kernel=self.cfg.guided_kernel,
+                    probe_log=getattr(self.cfg, "probe_log", None),
                 )
         return self._guided
 
@@ -205,7 +211,9 @@ class ShardEngine:
             return self.inv.postings(t)
         hit = self._decode_cache.get(t)
         if hit is None:
-            hit = store.postings(t)
+            with trace.span("decode.postings", term=int(t)) as sp:
+                hit = store.postings(t)
+                sp.set(bytes=int(hit.nbytes))
             self._decode_cache.put(t, hit, hit.nbytes)
         return hit
 
@@ -239,12 +247,14 @@ class ShardEngine:
         larger ids, so floor ties lose)."""
         src = self.ranked
         scorer = self._batch_scorer() if self.cfg.score_kernel else None
-        ans = topk_query(
-            src, terms, k,
-            required=required, floor=floor,
-            exhaustive_cutoff=self.cfg.topk_exhaustive_cutoff,
-            stats=self.ranked_stats, batch_scorer=scorer,
-        )
+        with trace.span("shard.topk", shard=self.shard_id, k=int(k),
+                        terms=len(tuple(terms))):
+            ans = topk_query(
+                src, terms, k,
+                required=required, floor=floor,
+                exhaustive_cutoff=self.cfg.topk_exhaustive_cutoff,
+                stats=self.ranked_stats, batch_scorer=scorer,
+            )
         return TopKResult(
             ids=(ans.ids.astype(np.int64) + self.lo).astype(np.int32),
             scores=ans.scores,
@@ -302,16 +312,22 @@ class ShardEngine:
             return out
         if mask is None:
             mask = self.candidate_mask(q)
+        log = getattr(self.cfg, "probe_log", None)
         for i in range(n_queries):
             if run is not None and not run[i]:
                 continue
-            ids = np.nonzero(mask[i])[0].astype(np.int32)
-            if self.cfg.verified:
-                if qplans is not None:
-                    routes = plan.routes[i] if plan is not None else None
-                    ids = self._verify_terms(qplans[i].terms, ids, routes)
-                else:
-                    ids = self._verify(q[i], ids)
+            # probe records inside attribute to (batch-local query i, shard)
+            ctx = log.context(query=i, shard=self.shard_id) if log is not None else NULL_SPAN
+            with ctx, trace.span("shard.verify", shard=self.shard_id, query=i) as sp:
+                ids = np.nonzero(mask[i])[0].astype(np.int32)
+                sp.set(candidates=int(len(ids)))
+                if self.cfg.verified:
+                    if qplans is not None:
+                        routes = plan.routes[i] if plan is not None else None
+                        ids = self._verify_terms(qplans[i].terms, ids, routes)
+                    else:
+                        ids = self._verify(q[i], ids)
+                sp.set(results=int(len(ids)))
             out[i] = pack_ids(ids, self.n_docs)
         return out
 
@@ -387,17 +403,43 @@ class ShardEngine:
                 bits["payload_bits"] = int(self._tier2.payload_size_bits())
         return bits
 
+    @property
+    def metrics(self) -> Registry:
+        """This shard's metrics registry (built lazily so partially-
+        constructed test doubles work; collectors close over self, so the
+        registry tracks later cache/guided/ranked replacements)."""
+        reg = getattr(self, "_metrics", None)
+        if reg is None:
+            reg = Registry()
+            reg.register("range", lambda: {"lo": int(self.lo), "hi": int(self.hi)})
+            reg.register(
+                "decode_cache",
+                lambda: self._decode_cache.stats(),
+                reset=lambda: self._decode_cache.reset_counters(),
+            )
+            reg.register(
+                "guided",
+                lambda: self._guided.stats.as_dict() if self._guided is not None else None,
+                reset=lambda: self._guided.reset_stats() if self._guided is not None else None,
+            )
+            reg.register(
+                "ranked",
+                lambda: self.ranked_stats.as_dict() if self.ranked_stats.queries else None,
+                reset=lambda: setattr(self, "ranked_stats", RankedStats()),
+            )
+            self._metrics = reg
+        return reg
+
     def serving_stats(self) -> dict[str, dict]:
-        """Hot-path accounting: decode-cache behaviour + guided-probe bytes."""
-        stats: dict[str, dict] = {
-            "range": {"lo": int(self.lo), "hi": int(self.hi)},
-            "decode_cache": self._decode_cache.stats(),
-        }
-        if self._guided is not None:
-            stats["guided"] = self._guided.stats.as_dict()
-        if self.ranked_stats.queries:
-            stats["ranked"] = self.ranked_stats.as_dict()
-        return stats
+        """Hot-path accounting: decode-cache behaviour + guided-probe bytes
+        (one registry snapshot — see repro.obs.metrics)."""
+        return self.metrics.snapshot()
+
+    def reset_stats(self) -> None:
+        """Zero this shard's probe/cache/ranked accounting window.  Owns all
+        shard-local state (the facade never reaches into privates); cached
+        decodes stay resident so the next pass measures warm serving."""
+        self.metrics.reset()
 
 
 class _RankedSource:
@@ -425,7 +467,9 @@ class _RankedSource:
         key = ("pay", t)
         hit = self._sh._decode_cache.get(key)
         if hit is None:
-            hit = self._store.payloads(t).astype(np.int64)
+            with trace.span("decode.payloads", term=int(t)) as sp:
+                hit = self._store.payloads(t).astype(np.int64)
+                sp.set(bytes=int(hit.nbytes))
             self._sh._decode_cache.put(key, hit, hit.nbytes)
         return hit
 
