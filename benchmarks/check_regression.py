@@ -14,6 +14,10 @@ any regresses beyond the tolerance:
                                 closed-loop service time, same run),
                                 latency_ratio (open-loop p99/p50 tail
                                 amplification under Poisson arrivals)
+  BENCH_serve_sustained.json    qps_ratio (serial fan-out vs the continuous-
+                                batching scheduler, same run), overload
+                                p99_over_deadline (admitted tail vs the
+                                deadline budget under 4x overload)
 
 Storage/bytes metrics are deterministic (seeded corpora), so any movement is
 a real code change.  The latency metric is the guided/full *ratio* measured
@@ -63,6 +67,13 @@ METRICS = [
     # tails are noisy on shared runners, so the floor is generous — but a
     # tail blowing past 25x the median signals real head-of-line blocking
     ("BENCH_serve_latency.json", "latency_ratio", 25.0),
+    # serial fan-out qps / scheduler qps within one run (machine-normalized);
+    # the floor is the acceptance bar — the process-replica scheduler must at
+    # least match serial serving at K shards on any machine
+    ("BENCH_serve_sustained.json", "summary.qps_ratio", 1.0),
+    # admitted p99 / deadline under 4x-capacity overload: deadline shedding
+    # must keep the admitted tail within 2x the budget (shed, don't convoy)
+    ("BENCH_serve_sustained.json", "overload.p99_over_deadline", 2.0),
 ]
 
 

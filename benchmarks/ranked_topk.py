@@ -89,7 +89,7 @@ def ranked_rows(write_json: bool = True):
             )
         eng.reset_stats()
         eng.query_topk(queries, TOP_K)  # accounting for exactly one pass
-        s = eng.serving_stats()["ranked"]
+        s = eng.metrics.snapshot()["ranked"]
         per_k[str(k)] = {
             "seconds": best,
             "qps": N_QUERIES / best,
@@ -102,7 +102,7 @@ def ranked_rows(write_json: bool = True):
 
     # exhaustive baseline on the same build: cutoff swallows every query
     exh = BooleanEngine(
-        lb, inv, li_cfg, ServeConfig(n_shards=1, topk_exhaustive_cutoff=1 << 30)
+        lb, inv, li_cfg, ServeConfig(n_shards=1, ranked=dict(topk_exhaustive_cutoff=1 << 30))
     )
     for sh in exh.shards:
         sh.ensure_payloads()

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV.
   ranked/.. MaxScore top-k vs exhaustive scoring  (+ BENCH_ranked_topk.json)
   serve_latency/.. open-loop Poisson tail latency + tracing overhead
                                                   (+ BENCH_serve_latency.json)
+  serve_sustained/.. continuous-batching scheduler vs serial fan-out under
+                     sustained Poisson load        (+ BENCH_serve_sustained.json)
   kernel/.. Pallas kernels, interpret-mode        (plumbing check)
   roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
 """
@@ -29,7 +31,7 @@ def main() -> None:
     from benchmarks.learned_postings import learned_rows
     from benchmarks.ranked_topk import ranked_rows
     from benchmarks.roofline import rows_from_file
-    from benchmarks.serve_latency import latency_rows
+    from benchmarks.serve_latency import latency_rows, sustained_rows
     from benchmarks.sharded_serve import sharded_rows
 
     print("name,us_per_call,derived")
@@ -44,6 +46,7 @@ def main() -> None:
     rows += sharded_rows()
     rows += ranked_rows()
     rows += latency_rows()
+    rows += sustained_rows()
     rows += kernel_rows()
     for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
         if os.path.exists(path):

@@ -28,10 +28,21 @@ Emits BENCH_serve_latency.json:
                                     from queueing, machine-normalized (gated)
 plus serve_latency.trace.json (Chrome-trace of the final traced pass; open
 in ui.perfetto.dev) and serve_latency.probes.jsonl (routed-probe records).
+
+``--sustained`` runs the sustained-load mode instead (``sustained_rows``):
+the continuous-batching Session over process replicas vs the serial facade
+— a closed-loop saturation pass for the gated qps_ratio (submit-all/drain,
+timed exactly like the serial baseline), a real-time Poisson rate sweep
+with exactness asserted for every admitted result (the latency curve), and
+an overload pass with deadlines.  Emits
+BENCH_serve_sustained.json (summary.qps_ratio and overload.p99_over_deadline
+are gated) and serve_sustained.curve.json (the rate->latency curve, uploaded
+as a CI artifact).
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 
 import numpy as np
@@ -51,6 +62,22 @@ N_SHARDS = 2
 UTILIZATION = 0.6  # offered load relative to the calibrated service rate
 REPS = 3  # off/on passes per tracer state (mean service, best pass taken)
 SEED = 23
+
+# ---- sustained-load mode (scheduler vs serial fan-out)
+SUSTAINED_PATH = "BENCH_serve_sustained.json"
+CURVE_PATH = "serve_sustained.curve.json"
+SUS_SHARDS = 4  # the K where the retired thread fan-out convoyed
+SUS_REPLICAS = 1  # process replicas per shard
+SUS_MAX_BATCH = 16
+SUS_REQUESTS = 160  # requests per sweep rate
+RATE_MULTIPLIERS = (0.5, 1.0, 2.0, 4.0)  # offered load relative to serial qps
+OVERLOAD_MULTIPLIER = 4.0
+OVERLOAD_REQUESTS = 400
+# deadline expiry happens at dispatch time, so an admitted request's worst
+# case is ~deadline + one batch service time; the budget must dominate the
+# per-batch service cost (~15-40 ms here) for p99_over_deadline to measure
+# shedding rather than service jitter
+OVERLOAD_DEADLINE_MS = 100.0
 
 
 def _system():
@@ -101,7 +128,7 @@ def latency_rows(write_json: bool = True):
 
     corpus, inv, li_cfg, lb = _system()
     probe_log = ProbeLog(PROBE_PATH if write_json else None)
-    cfg = ServeConfig(n_shards=N_SHARDS, probe_log=probe_log)
+    cfg = ServeConfig(n_shards=N_SHARDS, obs=dict(probe_log=probe_log))
     eng = BooleanEngine(lb, inv, li_cfg, cfg)
     for sh in eng.shards:
         sh.tier2  # codec selection out of every timed region
@@ -202,6 +229,215 @@ def latency_rows(write_json: bool = True):
     return rows
 
 
+def _sustained_workload(corpus, inv, eng):
+    """The request mix + its exact answers (asserted at every rate)."""
+    from repro.data.queries import (
+        brute_force_answers, zipf_conjunctions, zipf_disjunctions,
+    )
+    from repro.serve.sched import MODE_RANKED, QueryRequest
+
+    bool_q = zipf_conjunctions(inv.dfs, N_BOOLEAN, seed=SEED + 1)
+    ranked_q, _ = zipf_disjunctions(inv.dfs, N_RANKED, seed=SEED + 2)
+    bool_ans = eng.query_batch(bool_q)
+    for r, e in zip(bool_ans, brute_force_answers(corpus, bool_q)):
+        assert np.array_equal(r, e), "boolean serving must be exact"
+    ranked_ans = eng.query_topk(ranked_q, TOPK)
+    work = [
+        (QueryRequest(terms=q), (a, None)) for q, a in zip(bool_q, bool_ans)
+    ] + [
+        (QueryRequest(terms=q, mode=MODE_RANKED, k=TOPK), (a.ids, a.scores))
+        for q, a in zip(ranked_q, ranked_ans)
+    ]
+    rng = np.random.default_rng(SEED + 3)
+    return [work[i] for i in rng.permutation(len(work))]
+
+
+def _open_loop(session, work, rate, n_requests, rng, *, deadline_ms=None):
+    """Submit ``n_requests`` at real-time Poisson arrivals; collect outcomes.
+
+    Returns (admitted latencies seconds, shed outcomes, wall seconds).
+    Every admitted result is asserted bit-identical to the engine's answer.
+    """
+    from repro.serve.sched import QueryRequest, Rejected
+
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    submitted_at = np.zeros(n_requests)
+    done_at = np.zeros(n_requests)
+
+    def _done(i):
+        def cb(_fut):
+            done_at[i] = time.monotonic()
+        return cb
+
+    futs = []
+    t0 = time.monotonic()
+    for i in range(n_requests):
+        req, _ = work[i % len(work)]
+        wait = t0 + arrivals[i] - time.monotonic()
+        if wait > 0:
+            time.sleep(wait)
+        # latency is measured from the actual submit instant: sleep()
+        # overshoot at sub-ms inter-arrival gaps is pacing drift on the
+        # load generator, not scheduler queueing
+        submitted_at[i] = time.monotonic()
+        f = session.submit_async(
+            QueryRequest(terms=req.terms, mode=req.mode, k=req.k,
+                         deadline_ms=deadline_ms)
+        )
+        f.add_done_callback(_done(i))
+        futs.append(f)
+    results = [f.result(timeout=60) for f in futs]
+    wall = time.monotonic() - t0
+
+    lat, shed = [], []
+    for i, r in enumerate(results):
+        if isinstance(r, Rejected):
+            shed.append(r)
+            continue
+        _, (ids, scores) = work[i % len(work)]
+        assert np.array_equal(r.ids, ids), "scheduler must stay bit-exact"
+        if scores is not None:
+            assert np.array_equal(r.scores, scores)
+        lat.append(done_at[i] - submitted_at[i])
+    return np.asarray(lat), shed, wall
+
+
+def sustained_rows(write_json: bool = True):
+    """Sustained-load mode: the scheduler vs serial fan-out at K shards."""
+    import tempfile
+
+    from repro.serve import BooleanEngine, ServeConfig, Session
+
+    corpus, inv, li_cfg, lb = _system()
+    cfg = ServeConfig(
+        n_shards=SUS_SHARDS,
+        sched=dict(n_replicas=SUS_REPLICAS, max_batch=SUS_MAX_BATCH),
+    )
+    eng = BooleanEngine(lb, inv, li_cfg, cfg)
+    for sh in eng.shards:
+        sh.tier2  # codec selection out of every timed region
+    work = _sustained_workload(corpus, inv, eng)
+    rng = np.random.default_rng(SEED + 4)
+
+    # ---- serial baseline: the facade engine, one request at a time (what a
+    # caller got before the scheduler existed: in-process serial fan-out)
+    serial_qps = 0.0
+    for _ in range(2):  # best of 2 (first pass absorbs any remaining warmup)
+        t0 = time.perf_counter()
+        for req, _ in work:
+            if req.mode == "boolean":
+                eng.query_batch([req.terms])
+            else:
+                eng.query_topk([req.terms], TOPK)
+        serial_qps = max(serial_qps, len(work) / (time.perf_counter() - t0))
+
+    sweep = []
+    with tempfile.TemporaryDirectory() as store_dir:
+        with Session(eng, store_dir=store_dir) as session:
+            session.warm()  # spawn + engine rebuild outside every timed region
+
+            # ---- scheduler saturation throughput, measured closed-loop
+            # exactly like the serial baseline (submit everything, drain,
+            # best of 2).  The gated qps_ratio compares like with like: the
+            # open-loop sweep below is kept for the latency curve, but its
+            # achieved qps rides on Poisson pacing from a GIL-contended
+            # generator thread and is too noisy to gate on.
+            sched_qps = 0.0
+            for _ in range(2):
+                t0 = time.perf_counter()
+                futs = [session.submit_async(req, block=True)
+                        for req, _ in work]
+                results = [f.result(timeout=60) for f in futs]
+                dt = time.perf_counter() - t0
+                for r, (_, (ids, scores)) in zip(results, work):
+                    assert r.ok and np.array_equal(r.ids, ids), \
+                        "scheduler must stay bit-exact"
+                    if scores is not None:
+                        assert np.array_equal(r.scores, scores)
+                sched_qps = max(sched_qps, len(work) / dt)
+
+            for mult in RATE_MULTIPLIERS:
+                rate = mult * serial_qps
+                lat, shed, wall = _open_loop(
+                    session, work, rate, SUS_REQUESTS, rng
+                )
+                assert not shed, "no deadline, queue below bound: nothing sheds"
+                sweep.append({
+                    "rate_x": mult,
+                    "offered_qps": rate,
+                    "qps": len(lat) / wall,
+                    "p50_ms": 1e3 * float(np.percentile(lat, 50)),
+                    "p99_ms": 1e3 * float(np.percentile(lat, 99)),
+                    "admitted": len(lat),
+                    "shed": 0,
+                })
+
+            # ---- overload: offered far past capacity with a deadline; the
+            # admitted tail stays bounded and the rest sheds *typed*
+            lat, shed, wall = _open_loop(
+                session, work, OVERLOAD_MULTIPLIER * serial_qps,
+                OVERLOAD_REQUESTS, rng, deadline_ms=OVERLOAD_DEADLINE_MS,
+            )
+            assert shed, "overload past capacity must shed"
+            reasons = sorted({r.reason for r in shed})
+            assert set(reasons) <= {"deadline", "queue_full"}, reasons
+            overload = {
+                "offered_qps": OVERLOAD_MULTIPLIER * serial_qps,
+                "deadline_ms": OVERLOAD_DEADLINE_MS,
+                "admitted": len(lat),
+                "shed": len(shed),
+                "shed_reasons": reasons,
+                "p99_ms": 1e3 * float(np.percentile(lat, 99)),
+                # gated: deadline shedding must keep the admitted tail near
+                # the deadline budget even at 4x offered load
+                "p99_over_deadline": float(np.percentile(lat, 99))
+                / (OVERLOAD_DEADLINE_MS / 1e3),
+            }
+            sched_snapshot = eng.metrics.snapshot().get("sched", {})
+
+    traj = {
+        "workload": {
+            "n_docs": N_DOCS,
+            "n_terms": N_TERMS,
+            "n_boolean": N_BOOLEAN,
+            "n_ranked": N_RANKED,
+            "topk": TOPK,
+            "n_shards": SUS_SHARDS,
+            "n_replicas": SUS_REPLICAS,
+            "max_batch": SUS_MAX_BATCH,
+            "requests_per_rate": SUS_REQUESTS,
+        },
+        "summary": {
+            "serial_qps": serial_qps,
+            "sched_qps": sched_qps,
+            # gated (lower is better, floor 1.0): the process-worker
+            # scheduler must at least match serial fan-out qps at K shards
+            "qps_ratio": serial_qps / sched_qps,
+        },
+        "sweep": sweep,
+        "overload": overload,
+        "sched_metrics": sched_snapshot,
+    }
+    rows = [
+        ("serve_sustained/qps", 0.0,
+         f"serial={serial_qps:.1f}_sched={sched_qps:.1f}"
+         f"_ratio={traj['summary']['qps_ratio']:.3f}"),
+        ("serve_sustained/overload", 0.0,
+         f"admitted_p99_ms={overload['p99_ms']:.1f}_shed={overload['shed']}"),
+    ]
+    if write_json:
+        with open(SUSTAINED_PATH, "w") as f:
+            json.dump(traj, f, indent=2)
+        with open(CURVE_PATH, "w") as f:
+            json.dump({"sweep": sweep, "overload": overload}, f, indent=2)
+        rows.append(
+            ("serve_sustained/json", 0.0, f"wrote {SUSTAINED_PATH}+{CURVE_PATH}")
+        )
+    return rows
+
+
 if __name__ == "__main__":
-    for name, us, derived in latency_rows():
+    mode = sustained_rows if "--sustained" in sys.argv[1:] else latency_rows
+    for name, us, derived in mode():
         print(f"{name},{us:.1f},{derived}")

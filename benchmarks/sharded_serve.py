@@ -106,7 +106,7 @@ def sharded_rows(write_json: bool = True):
                 assert np.array_equal(r, e), f"K={k} differs from K=1 (bit-identity)"
         eng.reset_stats()
         eng.query_batch(queries)  # byte accounting for exactly one pass
-        s = eng.serving_stats()["summary"]
+        s = eng.metrics.snapshot()["summary"]
         per_k[str(k)] = {
             "seconds": best,
             "qps": N_QUERIES / best,

@@ -115,7 +115,7 @@ def main():
           f"(fraction {rs['scored_fraction']:.3f})")
 
     # 10. observability: re-serve the same workloads with the span tracer and
-    # probe log on (ServeConfig(trace=..., probe_log=...) — or
+    # probe log on (ServeConfig(obs=dict(trace=..., probe_log=...)) — or
     # `repro.launch.serve --trace-out --probe-log` from the CLI), then read
     # per-phase latency percentiles from the metrics registry and drop the
     # Chrome-trace JSON into ui.perfetto.dev to see the query path
@@ -123,7 +123,7 @@ def main():
 
     tracer, plog = Tracer(), ProbeLog()  # path-less log collects in memory
     obs_cfg = ServeConfig(algorithm="block", verified=True,
-                          trace=tracer, probe_log=plog)
+                          obs=dict(trace=tracer, probe_log=plog))
     obs_eng = BooleanEngine(lb, inv, li_cfg, obs_cfg)
     obs_eng.query_batch(conj)
     obs_eng.query_topk(ranked_q, 10)
@@ -140,6 +140,28 @@ def main():
         tracer.save(f"{d}/quickstart.trace.json")
         print(f"Chrome trace saved (open in ui.perfetto.dev): "
               f"{len(tracer.chrome_trace()['traceEvents'])} events")
+
+    # 11. the serving front-end: submit everything through one request type.
+    # The Session coalesces arrivals into batches (continuous batching),
+    # fans them out per shard, and resolves each request to a QueryResult or
+    # a typed Rejected — here inline (n_replicas=0); set
+    # sched=dict(n_replicas=R) plus store_dir= for process replicas, and see
+    # README "Serving front-end" for tenants/priorities/deadlines
+    from repro.serve import QueryRequest, Session
+
+    with Session(sharded) as session:
+        r = session.submit(QueryRequest(terms=conj[0]))
+        assert r.ok and np.array_equal(r.ids, conj_results[0])
+        rr = session.submit(QueryRequest(terms=ranked_q[0], mode="ranked", k=10))
+        assert np.array_equal(rr.ids, top.ids)
+        never = session.submit(QueryRequest(terms=conj[1], deadline_ms=0.0))
+        sm = sharded.metrics.snapshot()["sched"]
+    print(f"scheduler: served boolean+ranked via Session.submit "
+          f"(parity with steps 7/9), queue wait "
+          f"{r.queue_us / 1e3:.2f} ms; an already-expired deadline came "
+          f"back typed: ok={never.ok} reason={never.reason!r}; "
+          f"{sm['batches']} batches dispatched, {sm['shed']['deadline']} shed")
+    assert not never.ok and never.reason == "deadline"
 
 
 if __name__ == "__main__":

@@ -16,9 +16,17 @@ the tier-2 payload streams, checked bit-exact against brute-force scoring.
 chrome://tracing or https://ui.perfetto.dev); --probe-log FILE streams one
 JSONL record per routed probe with its route decision and bytes touched.
 
+--replicas R additionally drives the same batch through the continuous-
+batching scheduler (serve/sched.Session.submit): R=0 serves inline on the
+facade's own shards, R>0 spawns R process replicas per shard over the
+persistent store; --deadline-ms bounds each request's queue wait (late
+requests come back as typed Rejected, never silently dropped).
+
   PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --index-dir /tmp/idx
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --replicas 1 \\
+      --deadline-ms 100
   PYTHONPATH=src python -m repro.launch.serve --trace-out serve.trace.json \\
       --probe-log probes.jsonl
 """
@@ -86,6 +94,12 @@ def main():
                     help="write a Chrome-trace JSON of every served batch here")
     ap.add_argument("--probe-log", default=None,
                     help="stream per-(query, term, shard) probe records (JSONL)")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="also serve through the scheduler (Session.submit): "
+                         "0 = inline, N>0 = N process replicas per shard")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="scheduler default deadline; requests queued past it "
+                         "are shed with a typed Rejected")
     args = ap.parse_args()
 
     corpus = synthesize_corpus(
@@ -101,7 +115,7 @@ def main():
     probe_log = ProbeLog(args.probe_log) if args.probe_log else None
     cfg = ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
                       use_kernel=args.use_kernel, n_shards=args.shards,
-                      trace=tracer, probe_log=probe_log)
+                      obs=dict(trace=tracer, probe_log=probe_log))
     eng = BooleanEngine(lb, inv, li_cfg, cfg)
     if args.index_dir:
         t0 = time.time()
@@ -150,6 +164,43 @@ def main():
               f"scored {rs['touched_postings']}/{rs['exhaustive_postings']} "
               f"postings (fraction {rs['scored_fraction']:.3f})")
         assert ok, "ranked serving must match brute-force BM25"
+
+    if args.replicas is not None:
+        import tempfile
+
+        from repro.serve import QueryRequest, Session
+
+        eng.cfg.sched.n_replicas = args.replicas
+        eng.cfg.sched.default_deadline_ms = args.deadline_ms
+        store = args.index_dir or (
+            tempfile.mkdtemp(prefix="repro-shards-") if args.replicas > 0 else None
+        )
+        with Session(eng, store_dir=store) as session:
+            if args.replicas > 0:
+                session.warm()  # spawn + jit warmup outside the timed region
+            t0 = time.time()
+            futs = [
+                session.submit_async(QueryRequest(terms=row), block=True)
+                for row in q
+            ]
+            outs = [f.result() for f in futs]
+            dt = (time.time() - t0) / len(q) * 1e3
+            served = [o for o in outs if o.ok]
+            shed = [o for o in outs if not o.ok]
+            n_same = sum(
+                np.array_equal(o.ids, r) for o, r in zip(outs, results) if o.ok
+            )
+            sm = eng.metrics.snapshot()["sched"]
+            kind = f"{args.replicas} process replica(s)/shard" if args.replicas \
+                else "inline"
+            print(f"[serve] scheduler ({kind}): {len(served)} served in "
+                  f"{sm['batches']} batches (mean size "
+                  f"{sm['batch_size']['mean']:.1f}), {dt:.2f} ms/query, "
+                  f"parity-with-facade={n_same}/{len(served)}")
+            if shed:
+                print(f"[serve] scheduler shed {len(shed)} request(s): "
+                      f"{sorted({o.reason for o in shed})}")
+            assert n_same == len(served), "Session.submit must match query_batch"
 
     lat = eng.metrics.snapshot().get("latency", {})
     for name in ("query_us", "topk_query_us"):

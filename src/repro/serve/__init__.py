@@ -1,5 +1,6 @@
 from repro.rank.score import TopKResult
-from repro.serve.boolean import BooleanEngine, ServeConfig
+from repro.serve.boolean import BooleanEngine
+from repro.serve.config import ObsConfig, RankedConfig, SchedConfig, ServeConfig
 from repro.serve.planner import (
     BatchPlan,
     QueryPlan,
@@ -9,17 +10,32 @@ from repro.serve.planner import (
     plan_ranked,
     ranked_run_mask,
 )
+from repro.serve.sched import (
+    QueryRequest,
+    QueryResult,
+    Rejected,
+    Session,
+    WorkerFailure,
+)
 from repro.serve.shard import ShardEngine, shard_ranges, slice_bloom
 
 __all__ = [
     "BatchPlan",
     "BooleanEngine",
+    "ObsConfig",
     "QueryPlan",
+    "QueryRequest",
+    "QueryResult",
+    "RankedConfig",
     "RankedQueryPlan",
+    "Rejected",
+    "SchedConfig",
     "ServeConfig",
+    "Session",
     "ShardEngine",
     "ShardPlan",
     "TopKResult",
+    "WorkerFailure",
     "plan_batch",
     "plan_ranked",
     "ranked_run_mask",

@@ -10,9 +10,11 @@ The paper's system in deployable form, refactored into three layers:
   2. **execute** (serve/shard.py) — K document-partitioned ShardEngines,
      each owning its learned-Bloom slice, guided-probe TermModels and
      decode-cost-budgeted CostLRU, serve their plan (one candidate-mask
-     dispatch + one guided probe batch per shard; probe phases fan out on a
-     thread pool when ServeConfig.shard_workers asks for it) and return
-     packed result bitmaps over local doc ids;
+     dispatch + one guided probe batch per shard) and return packed result
+     bitmaps over local doc ids.  Parallel shard execution belongs to the
+     continuous-batching scheduler (serve/sched): its Session dispatches
+     per-shard work to process-replica groups, which is what removed the
+     retired thread pool's ~8x GIL convoy at K=4;
   3. **merge** — shard bitmaps word-copy into the global bitmap at their
      doc-id offset (shard boundaries are 32-aligned), then materialize to
      per-query sorted doc-id arrays.
@@ -35,8 +37,6 @@ from __future__ import annotations
 
 import time
 import warnings
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
 
 import numpy as np
 
@@ -45,43 +45,21 @@ from repro.core.learned_bloom import LearnedBloom
 from repro.index.build import InvertedIndex
 from repro.obs import trace
 from repro.obs.metrics import Registry
-from repro.obs.probelog import ProbeLog
-from repro.obs.trace import NULL_SPAN, Tracer
+from repro.obs.trace import NULL_SPAN
 from repro.postings.search import ProbeStats
 from repro.rank.score import BM25Params, ImpactModel, TopKResult, select_topk
 from repro.rank.topk import RankedStats
+from repro.serve.config import ObsConfig, RankedConfig, SchedConfig, ServeConfig
 from repro.serve.planner import BatchPlan, plan_batch, plan_ranked, ranked_run_mask
 from repro.serve.shard import WORD_BITS, ShardEngine, shard_ranges, slice_bloom, unpack_row
 
-
-@dataclass
-class ServeConfig:
-    algorithm: str = "block"
-    verified: bool = True
-    use_kernel: bool = False
-    max_query_terms: int = 8
-    postings_store: str = "hybrid"  # tier-2 backing: "hybrid" (compressed) | "raw"
-    use_guided: bool = True  # model-guided contains() probes for learned terms
-    guided_kernel: bool = False  # batch probes on the Pallas guided_search kernel
-    cache_budget_bytes: int = 32 << 20  # decode-cost budget of each shard's LRU
-    n_shards: int = 1  # document partitions (contiguous, 32-aligned ranges)
-    # thread-pool workers for the per-shard probe/verify phase; 0 = fan out
-    # serially on the calling thread.  The probe phase is many small numpy
-    # ops, so on GIL-ed CPython threads convoy (measured ~8x slower at K=4);
-    # raise this on free-threaded builds or guided_kernel workloads where
-    # per-shard probe batches release the GIL for real work.
-    shard_workers: int = 0
-    # ---- ranked (top-k) serving
-    ranked: bool = True  # build payload streams when the index carries tfs
-    payload_bits: int = 8  # quantized-impact width (BM25Params.bits)
-    # queries whose total postings fit under this skip MaxScore bookkeeping
-    # and score exhaustively (still exact); 0 forces pruning everywhere
-    topk_exhaustive_cutoff: int = 2048
-    score_kernel: bool = False  # batch exhaustive scoring on the Pallas kernel
-    # ---- observability (repro.obs); all opt-in, None costs ~nothing
-    trace: Tracer | None = None  # span tracer, active for every served batch
-    metrics: Registry | None = None  # facade registry (engine creates one if None)
-    probe_log: ProbeLog | None = None  # per-(query, term, shard) routed-probe JSONL
+__all__ = [
+    "BooleanEngine",
+    "ObsConfig",
+    "RankedConfig",
+    "SchedConfig",
+    "ServeConfig",
+]
 
 
 class BooleanEngine:
@@ -103,7 +81,7 @@ class BooleanEngine:
         self.n_docs = lb.n_docs
         self._impact_model = None
         can_rank = (
-            self.cfg.ranked
+            self.cfg.ranked.enabled
             and inv is not None
             and inv.tfs is not None
             and self.cfg.postings_store == "hybrid"
@@ -137,24 +115,18 @@ class BooleanEngine:
             self._global_dfs = sum((s.local_dfs for s in active), start=0)
         # one registry per facade: primitives (query counters, per-phase
         # latency histograms) plus collectors aggregating the shards
-        self.metrics = self.cfg.metrics if self.cfg.metrics is not None else Registry()
+        obs = self.cfg.obs
+        self.metrics = obs.metrics if obs.metrics is not None else Registry()
         self._ranked_queries = self.metrics.counter("queries.ranked")
         self._boolean_queries = self.metrics.counter("queries.boolean")
         self._register_collectors()
-        self._pool = (
-            ThreadPoolExecutor(
-                max_workers=min(self.cfg.shard_workers, len(active)),
-                thread_name_prefix="shard",
-            )
-            if len(active) > 1 and self.cfg.shard_workers > 1 else None
-        )
 
     def _build_impact_model(self) -> ImpactModel:
         """Fit (once) the collection-global quantizer: every shard's payload
         stream is then a bit-exact slice of the global one (rank/score.py)."""
         if self._impact_model is None:
             self._impact_model = ImpactModel.build(
-                self.inv, BM25Params(bits=self.cfg.payload_bits)
+                self.inv, BM25Params(bits=self.cfg.ranked.payload_bits)
             )
         return self._impact_model
 
@@ -275,10 +247,10 @@ class BooleanEngine:
         if k <= 0:
             return [empty for _ in range(q.shape[0])]
         self._ranked_queries.inc(int(q.shape[0]))
-        log = self.cfg.probe_log
+        log = self.cfg.obs.probe_log
         active = self.shards
         out: list[TopKResult] = []
-        with trace.activate(self.cfg.trace), \
+        with trace.activate(self.cfg.obs.trace), \
                 trace.span("serve.topk_batch", queries=int(q.shape[0]), k=int(k)):
             with trace.span("serve.plan"):
                 qplans = plan_ranked(q, self._global_dfs, mode=mode, required=required)
@@ -328,14 +300,15 @@ class BooleanEngine:
         Two phases per the executor contract: learned-Bloom candidate masks
         are one jit dispatch per shard, issued serially (concurrent dispatch
         contends on the device client); the probe/verify phase — guided
-        ε-window probes and cache decodes, pure numpy — fans out across
-        shards, on the thread pool when cfg.shard_workers > 1 (see the
-        ServeConfig note on the GIL) and on the calling thread otherwise.
+        ε-window probes and cache decodes, pure numpy — runs shard by shard
+        on the calling thread.  Parallel shard execution lives one level up:
+        serve.sched.Session dispatches to process replicas (no GIL convoy,
+        the retired ThreadPoolExecutor's measured ~8x slowdown at K=4).
         """
         active = self.shards
         t_batch = time.perf_counter_ns()
         self._boolean_queries.inc(int(q.shape[0]))
-        with trace.activate(self.cfg.trace), \
+        with trace.activate(self.cfg.obs.trace), \
                 trace.span("serve.batch", queries=int(q.shape[0]),
                            shards=len(active)):
             t0 = time.perf_counter_ns()
@@ -353,20 +326,10 @@ class BooleanEngine:
                     masks.append(None)
             self._observe_us("mask_us", t0)
             t0 = time.perf_counter_ns()
-            tr = trace.current()  # re-activated inside pool workers
-
-            def probe_phase(sh, sp, m):
-                with trace.activate(tr), \
-                        trace.span("serve.probe_phase", shard=sh.shard_id):
-                    return sh.execute(q, sp, plan.qplans, mask=m)
-
-            if self._pool is None:
-                parts = [probe_phase(sh, sp, m)
-                         for sh, sp, m in zip(active, plan.shard_plans, masks)]
-            else:
-                futs = [self._pool.submit(probe_phase, sh, sp, m)
-                        for sh, sp, m in zip(active, plan.shard_plans, masks)]
-                parts = [f.result() for f in futs]
+            parts = []
+            for sh, sp, m in zip(active, plan.shard_plans, masks):
+                with trace.span("serve.probe_phase", shard=sh.shard_id):
+                    parts.append(sh.execute(q, sp, plan.qplans, mask=m))
             self._observe_us("probe_us", t0)
             t0 = time.perf_counter_ns()
             with trace.span("serve.merge"):

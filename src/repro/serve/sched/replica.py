@@ -1,0 +1,185 @@
+"""Replica groups: least-loaded dispatch over shard executors, retry-once.
+
+A ``ReplicaGroup`` owns every executor that can serve one document
+partition.  Two replica kinds implement the same two-method surface
+(``call(msg)`` / ``close()`` plus an ``inflight`` load counter):
+
+  * ``InlineReplica`` — the facade engine's own in-process ``ShardEngine``.
+    The 0-replica scheduler path: no processes, no pickling, execution on
+    the session's dispatch thread through the *same* ``execute_bool`` /
+    ``execute_topk`` helpers the workers run.
+  * ``ProcessReplica`` — a spawned worker process (sched/worker.py) holding
+    its own engine over the shared mmap shard-store.  Spawn is lazy (first
+    ``call``) and a replica that died is respawned on its next use, so a
+    crashed worker costs one failed dispatch, not a dead shard.
+
+``ReplicaGroup.call`` picks the least-loaded live replica (smallest
+``inflight``), and on a ``ReplicaError`` retries the batch — preferring a
+*different* replica — up to ``SchedConfig.worker_retries`` times before
+surfacing a typed ``WorkerFailure``.  The session converts that into
+``Rejected("worker_failed")`` results: a crash mid-batch is visible, typed,
+and bounded, never a hang or a silent drop.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+
+from repro.serve.sched.api import WorkerFailure
+from repro.serve.sched.worker import execute_bool, execute_topk, worker_main
+
+
+class ReplicaError(RuntimeError):
+    """One dispatch to one replica failed (connection lost or worker error)."""
+
+
+class InlineReplica:
+    """In-process executor over the facade's own ShardEngine."""
+
+    def __init__(self, shard, global_dfs, cfg):
+        self._shard = shard
+        self._dfs = global_dfs
+        self._cfg = cfg
+        self._lock = threading.Lock()  # ShardEngine state is not thread-safe
+        self.inflight = 0
+
+    def call(self, msg):
+        with self._lock:
+            op = msg[0]
+            if op == "bool":
+                return execute_bool(self._shard, msg[1], self._dfs, self._cfg.verified)
+            if op == "topk":
+                return execute_topk(self._shard, msg[1])
+            if op == "ping":
+                return "pong"
+            if op == "stats":
+                return self._shard.metrics.snapshot()
+            raise ReplicaError(f"unknown op {op!r}")
+
+    def close(self) -> None:
+        pass
+
+
+class ProcessReplica:
+    """A worker process serving one shard; lazily spawned, auto-respawned."""
+
+    def __init__(self, spec: dict, *, spawn_timeout_s: float = 120.0):
+        self.spec = spec
+        self.spawn_timeout_s = spawn_timeout_s
+        self.inflight = 0
+        self._lock = threading.Lock()  # pipe is strict request/response
+        self._proc = None
+        self._conn = None
+
+    @property
+    def alive(self) -> bool:
+        return self._conn is not None and self._proc is not None and self._proc.is_alive()
+
+    def _start_locked(self) -> None:
+        ctx = mp.get_context("spawn")  # fork is unsafe under a live XLA client
+        parent, child = ctx.Pipe()
+        proc = ctx.Process(
+            target=worker_main, args=(child, self.spec), daemon=True,
+            name=f"shard-worker-{self.spec['shard_idx']}",
+        )
+        proc.start()
+        child.close()
+        if not parent.poll(self.spawn_timeout_s):
+            proc.terminate()
+            raise ReplicaError(
+                f"worker for shard {self.spec['shard_idx']} not ready within "
+                f"{self.spawn_timeout_s}s"
+            )
+        tag, payload = parent.recv()
+        if tag != "ready":
+            proc.terminate()
+            raise ReplicaError(f"worker failed to build its engine: {payload}")
+        self._proc, self._conn = proc, parent
+
+    def _fail_locked(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+        if self._proc is not None:
+            self._proc.terminate()
+        self._proc = self._conn = None
+
+    def call(self, msg):
+        with self._lock:
+            if not self.alive:
+                self._fail_locked()  # reap a dead process before respawn
+                self._start_locked()
+            try:
+                self._conn.send(msg)
+                tag, payload = self._conn.recv()
+            except (EOFError, BrokenPipeError, ConnectionResetError, OSError) as e:
+                self._fail_locked()
+                raise ReplicaError(f"worker connection lost: {e!r}") from e
+            if tag == "err":  # handler error; the worker itself is still up
+                raise ReplicaError(payload)
+            return payload
+
+    def close(self) -> None:
+        with self._lock:
+            if self.alive:
+                try:
+                    self._conn.send(("stop",))
+                except (BrokenPipeError, OSError):
+                    pass
+                self._proc.join(timeout=2.0)
+            self._fail_locked()
+
+
+class ReplicaGroup:
+    """Every replica able to serve one shard + the retry/dispatch policy."""
+
+    def __init__(
+        self,
+        shard_id: int,
+        replicas: list,
+        *,
+        lo: int = 0,
+        n_docs: int = 0,
+        retries: int = 1,
+        metrics=None,
+    ):
+        if not replicas:
+            raise ValueError(f"shard {shard_id}: a replica group needs >= 1 replica")
+        self.shard_id = shard_id
+        self.replicas = replicas
+        self.lo = lo  # global doc-id offset (the session's bitmap merge)
+        self.n_docs = n_docs
+        self.retries = retries
+        self._retried = metrics.counter("sched.worker_retries") if metrics else None
+        self._failed = metrics.counter("sched.worker_failures") if metrics else None
+
+    def call(self, msg):
+        """Dispatch to the least-loaded replica; retry once (per config) on
+        failure, preferring a sibling replica; then raise WorkerFailure."""
+        last: Exception | None = None
+        failed = None
+        for attempt in range(self.retries + 1):
+            replica = min(
+                self.replicas, key=lambda r: (r is failed, r.inflight)
+            )
+            replica.inflight += 1
+            try:
+                return replica.call(msg)
+            except ReplicaError as e:
+                last = e
+                failed = replica
+                if self._retried is not None and attempt < self.retries:
+                    self._retried.inc()
+            finally:
+                replica.inflight -= 1
+        if self._failed is not None:
+            self._failed.inc()
+        raise WorkerFailure(
+            shard_id=self.shard_id, attempts=self.retries + 1, detail=str(last)
+        )
+
+    def close(self) -> None:
+        for r in self.replicas:
+            r.close()

@@ -1,0 +1,468 @@
+"""Session: the continuous-batching serving front-end.
+
+``Session`` is the one front door to the serving stack — the unified API
+the ROADMAP's "throughput serving" item asked for:
+
+    requests ──> admission ──> queue ──> coalesce ──> per-shard dispatch
+                 (tenant        │         (continuous   (replica groups,
+                  quota,        │          batching:     least-loaded,
+                  bound,        │          same-mode,    retry-once)
+                  shed)         │          ≤ max_batch)       │
+                                │                             ▼
+                 deadline shed ─┘                      merge + resolve
+
+One scheduler thread drains the admission queue (sched/admission.py) into
+coalesced same-mode batches; batch *execution* runs on a small runner pool
+(`max(1, n_replicas)` slots) so that with process replicas multiple batches
+are in flight at once — while a batch executes, new arrivals pile up, and
+the next dispatch is a bigger batch.  That is continuous batching: device-
+sized per-shard batches form from whatever has arrived, with no fixed batch
+boundary and no closed-loop barrier.
+
+Within a batch the dispatch is the planner/executor seam from the sharded
+refactor: every shard's replica group gets the whole padded batch, plans it
+locally with *global* document frequencies (identical term order and
+routes), and returns packed bitmaps (Boolean) or local top-k heaps
+(ranked); the session word-copies bitmaps by doc offset and folds heaps
+with the same ``select_topk`` the engine facade uses — so every path stays
+bit-identical to the legacy ``query_*`` entry points, which survive here as
+thin wrappers over ``submit``.
+
+Every decision is observable: ``sched.*`` counters/histograms land in the
+engine's metrics registry and enqueue/batch/dispatch/merge spans ride the
+engine's tracer (repro.obs), so BENCH artifacts explain themselves.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import numpy as np
+
+from repro.obs import trace
+from repro.rank.score import TopKResult, select_topk
+from repro.serve.sched.admission import AdmissionQueue, Pending
+from repro.serve.sched.api import (
+    MODE_BOOLEAN,
+    MODE_RANKED,
+    REJECT_SHUTDOWN,
+    REJECT_WORKER_FAILED,
+    QueryRequest,
+    QueryResult,
+    Rejected,
+    WorkerFailure,
+)
+from repro.serve.sched.replica import InlineReplica, ProcessReplica, ReplicaGroup
+from repro.serve.shard import WORD_BITS, pack_ids, unpack_row
+
+
+def _numpy_tree(obj):
+    """Best-effort jax->numpy conversion of a params pytree (pickling)."""
+    if isinstance(obj, dict):
+        return {k: _numpy_tree(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(_numpy_tree(v) for v in obj)
+    return np.asarray(obj)
+
+
+class Session:
+    """Continuous-batching front-end over a ``BooleanEngine`` (see module doc).
+
+    ``store_dir`` is required when ``cfg.sched.n_replicas > 0``: process
+    replicas rebuild their engines from the persistent shard-store (saved
+    there on first use if absent).  ``replica_groups`` injects prebuilt
+    groups (tests).  Use as a context manager, or call ``close()``.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        store_dir: str | None = None,
+        replica_groups: list[ReplicaGroup] | None = None,
+        auto_start: bool = True,
+    ):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.sched_cfg = engine.cfg.sched
+        self.metrics = engine.metrics
+        self.n_docs = engine.n_docs
+        self._closed = False
+        self._queue = AdmissionQueue(self.sched_cfg, self.metrics)
+        self._batches = self.metrics.counter("sched.batches")
+        self._dispatched = self.metrics.counter("sched.dispatched")
+        self._short_circuit = self.metrics.counter("sched.short_circuit")
+        self._batch_size = self.metrics.histogram("sched.batch_size")
+        self._queue_us = self.metrics.histogram("sched.queue_us")
+        self._service_us = self.metrics.histogram("sched.service_us")
+        self._groups = (
+            replica_groups
+            if replica_groups is not None
+            else self._build_groups(store_dir)
+        )
+        # 2x the replica count so batch N+1 plans/merges while batch N is in
+        # the workers (the replicas' own locks serialize actual execution)
+        slots = 2 * max(1, self.sched_cfg.n_replicas)
+        self._slots = threading.Semaphore(slots)
+        self._runners = ThreadPoolExecutor(slots, thread_name_prefix="sched-run")
+        # per-shard dispatch inside one batch: calls block in pipe recv (GIL
+        # released), so threads here fan process replicas out for real
+        self._fan = ThreadPoolExecutor(
+            max(1, len(self._groups)) * slots, thread_name_prefix="sched-fan"
+        )
+        self._loop_thread = threading.Thread(
+            target=self._loop, name="sched-loop", daemon=True
+        )
+        if auto_start:
+            self._loop_thread.start()
+
+    # --------------------------------------------------------------- setup
+    def _build_groups(self, store_dir: str | None) -> list[ReplicaGroup]:
+        eng, sc = self.engine, self.sched_cfg
+        if sc.n_replicas <= 0:
+            return [
+                ReplicaGroup(
+                    sh.shard_id,
+                    [InlineReplica(sh, eng._global_dfs, eng.cfg)],
+                    lo=sh.lo,
+                    n_docs=sh.n_docs,
+                    retries=sc.worker_retries,
+                    metrics=self.metrics,
+                )
+                for sh in eng.shards
+            ]
+        if store_dir is None:
+            raise ValueError(
+                "process replicas (sched.n_replicas > 0) rebuild engines from "
+                "the persistent shard-store: pass Session(engine, store_dir=...)"
+            )
+        if not os.path.exists(os.path.join(store_dir, "shards.json")):
+            eng.save(store_dir)
+        lb = eng.lb
+        lb_params = _numpy_tree(lb.params)
+        lb_tau = np.asarray(lb.tau)
+        lb_backup = np.asarray(lb.backup_keys)
+        global_dfs = np.asarray(eng._global_dfs)
+        groups = []
+        for idx, ((lo, hi), sh) in enumerate(zip(eng._ranges, eng._shards)):
+            if sh is None:
+                continue
+            spec = {
+                "store_dir": store_dir,
+                "shard_idx": idx,
+                "lo": lo,
+                "hi": hi,
+                "lb_params": lb_params,
+                "lb_tau": lb_tau,
+                "lb_backup_keys": lb_backup,
+                "n_docs": lb.n_docs,
+                "li_cfg": eng.li_cfg,
+                "cfg_kwargs": eng.cfg.worker_spec(),
+                "global_dfs": global_dfs,
+            }
+            groups.append(
+                ReplicaGroup(
+                    idx,
+                    [
+                        ProcessReplica(spec, spawn_timeout_s=sc.spawn_timeout_s)
+                        for _ in range(sc.n_replicas)
+                    ],
+                    lo=lo,
+                    n_docs=hi - lo,
+                    retries=sc.worker_retries,
+                    metrics=self.metrics,
+                )
+            )
+        return groups
+
+    def warm(self) -> None:
+        """Force-spawn every process replica and pre-compile the batch shapes.
+
+        The membership probe (``candidate_mask``) is one jit dispatch
+        specialized on the padded batch shape; dispatch pads batches to
+        power-of-two buckets (``_bucket``), so warming each bucket here keeps
+        compilation out of the serving path entirely.
+        """
+        replicas = [r for g in self._groups for r in g.replicas]
+        futs = [self._fan.submit(r.call, ("ping",)) for r in replicas]
+        for f in futs:
+            assert f.result() == "pong"
+        # one live term so the probe phase actually runs (all-pad batches
+        # short-circuit before the jit dispatch)
+        t = int(np.argmax(self.engine._global_dfs))
+        b = 1
+        while True:
+            q = np.full((b, self.cfg.max_query_terms), -1, dtype=np.int32)
+            q[:, 0] = t
+            futs = [self._fan.submit(r.call, ("bool", q)) for r in replicas]
+            for f in futs:
+                f.result()
+            if b >= self.sched_cfg.max_batch:
+                break
+            b = min(2 * b, self.sched_cfg.max_batch)
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Round a batch size up to a power of two: a handful of padded
+        shapes instead of one jit compilation per distinct batch size."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    # -------------------------------------------------------------- submit
+    def submit_async(self, req: QueryRequest, *, block: bool = False) -> Future:
+        """Admit one request; the future resolves to QueryResult | Rejected.
+
+        ``block=True`` waits for queue space instead of shedding on a full
+        queue (the legacy sync wrappers' backpressure).  Never blocks on
+        execution — that is the future's job.
+        """
+        fut: Future = Future()
+        if self._closed:
+            fut.set_result(Rejected(reason=REJECT_SHUTDOWN, tenant=req.tenant))
+            return fut
+        row = req.terms
+        if len(row) < self.cfg.max_query_terms:
+            row = np.pad(
+                row, (0, self.cfg.max_query_terms - len(row)), constant_values=-1
+            )
+        # all-pad / k<=0 short-circuit: resolved here, never queued, exactly
+        # like the engine facade's empty-batch path
+        if (row < 0).all() or (req.mode == MODE_RANKED and req.k <= 0):
+            self._short_circuit.inc()
+            fut.set_result(self._empty_result(req))
+            return fut
+        now = time.monotonic()
+        deadline_ms = (
+            req.deadline_ms
+            if req.deadline_ms is not None
+            else self.sched_cfg.default_deadline_ms
+        )
+        pending = Pending(
+            req=req,
+            future=fut,
+            row=row,
+            t_submit=now,
+            deadline=now + deadline_ms / 1e3 if deadline_ms is not None else None,
+        )
+        with trace.activate(self.cfg.obs.trace), trace.span(
+            "sched.enqueue", mode=req.mode, tenant=req.tenant, priority=req.priority
+        ):
+            self._queue.offer(pending, block=block)
+        return fut
+
+    def submit(self, req: QueryRequest, *, timeout: float | None = None):
+        """Synchronous submit: block until served or shed."""
+        return self.submit_async(req, block=True).result(timeout)
+
+    def _empty_result(self, req: QueryRequest) -> QueryResult:
+        scores = np.zeros(0, np.int64) if req.mode == MODE_RANKED else None
+        return QueryResult(ids=np.zeros(0, np.int32), scores=scores)
+
+    # ---------------------------------------------------------------- loop
+    def _loop(self) -> None:
+        while True:
+            # claim a runner slot *before* popping work: while every slot is
+            # busy, arrivals keep coalescing in the queue instead of being
+            # pinned inside an already-popped batch that is stuck waiting
+            # for a runner
+            self._slots.acquire()
+            batch = self._queue.take_batch(self.sched_cfg.max_batch)
+            if not batch:
+                self._slots.release()
+                if self._closed:
+                    return
+                continue
+            self._runners.submit(self._run_batch, batch)
+
+    def _run_batch(self, batch: list[Pending]) -> None:
+        t0 = time.monotonic()
+        mode = batch[0].req.mode
+        for p in batch:
+            self._queue_us.observe(1e6 * (t0 - p.t_submit))
+        self._batches.inc()
+        self._batch_size.observe(len(batch))
+        self._dispatched.inc(len(batch))
+        try:
+            with trace.activate(self.cfg.obs.trace), trace.span(
+                "sched.batch", mode=mode, size=len(batch)
+            ):
+                if mode == MODE_BOOLEAN:
+                    self._run_boolean(batch, t0)
+                else:
+                    self._run_ranked(batch, t0)
+        except WorkerFailure as e:
+            for p in batch:
+                p.reject(REJECT_WORKER_FAILED, detail=str(e))
+        except Exception as e:  # never leave an admitted future hanging
+            for p in batch:
+                p.reject(REJECT_WORKER_FAILED, detail=repr(e))
+        finally:
+            self._service_us.observe(1e6 * (time.monotonic() - t0))
+            self._slots.release()
+
+    def _stack_rows(self, batch: list[Pending], pad_rows: bool = False) -> np.ndarray:
+        width = max(len(p.row) for p in batch)
+        rows = self._bucket(len(batch)) if pad_rows else len(batch)
+        q = np.full((rows, width), -1, dtype=np.int32)
+        for j, p in enumerate(batch):
+            q[j, : len(p.row)] = p.row
+        return q
+
+    def _fan_out(self, msg) -> list:
+        """One message to every shard group, in parallel when it pays."""
+        if len(self._groups) == 1:
+            return [self._groups[0].call(msg)]
+        futs = [self._fan.submit(g.call, msg) for g in self._groups]
+        return [f.result() for f in futs]  # re-raises WorkerFailure
+
+    def _timing(self, p: Pending, t0: float) -> dict:
+        return {
+            "queue_us": 1e6 * (t0 - p.t_submit),
+            "service_us": 1e6 * (time.monotonic() - t0),
+        }
+
+    def _run_boolean(self, batch: list[Pending], t0: float) -> None:
+        q = self._stack_rows(batch, pad_rows=True)  # bucketed probe shape
+        with trace.span("sched.dispatch", shards=len(self._groups), size=len(batch)):
+            parts = self._fan_out(("bool", q))
+        words = (self.n_docs + WORD_BITS - 1) // WORD_BITS
+        merged = np.zeros((len(batch), words), dtype=np.uint32)
+        with trace.span("sched.merge"):
+            for g, bm in zip(self._groups, parts):
+                off = g.lo // WORD_BITS
+                merged[:, off : off + bm.shape[1]] = bm[: len(batch)]
+        for j, p in enumerate(batch):
+            p.resolve(
+                QueryResult(ids=unpack_row(merged[j], self.n_docs), **self._timing(p, t0))
+            )
+
+    def _run_ranked(self, batch: list[Pending], t0: float) -> None:
+        from repro.serve.planner import plan_ranked
+
+        q = self._stack_rows(batch)
+        required = np.zeros(q.shape, dtype=bool)
+        for j, p in enumerate(batch):
+            if p.req.required is not None:
+                required[j, : len(p.req.required)] = p.req.required
+        qplans = plan_ranked(q, self.engine._global_dfs, mode="or", required=required)
+        items, idxmap = [], []
+        for j, (p, qp) in enumerate(zip(batch, qplans)):
+            if qp.dead:
+                p.resolve(
+                    QueryResult(
+                        ids=np.zeros(0, np.int32),
+                        scores=np.zeros(0, np.int64),
+                        **self._timing(p, t0),
+                    )
+                )
+                continue
+            # floor=0: shard heaps merge associatively, so replica groups can
+            # run concurrently — exactness never depended on floor forwarding
+            items.append((qp.terms, qp.required, int(p.req.k), 0))
+            idxmap.append(j)
+        if not items:
+            return
+        with trace.span("sched.dispatch", shards=len(self._groups), size=len(items)):
+            parts = self._fan_out(("topk", items))
+        with trace.span("sched.merge"):
+            for n, j in enumerate(idxmap):
+                p = batch[j]
+                ids = np.concatenate([part[n][0] for part in parts])
+                scores = np.concatenate([part[n][1] for part in parts])
+                top = select_topk(ids, scores, int(p.req.k))
+                p.resolve(
+                    QueryResult(ids=top.ids, scores=top.scores, **self._timing(p, t0))
+                )
+
+    # ----------------------------------------------------- legacy wrappers
+    def query_batch(self, queries: np.ndarray) -> list[np.ndarray]:
+        """Legacy entry point: (Q, T) padded term ids -> per-query doc ids.
+
+        A thin wrapper over ``submit`` — every row becomes one boolean
+        ``QueryRequest`` (blocking admission, no deadline), results are
+        bit-identical to ``BooleanEngine.query_batch``.
+        """
+        rows = self._rows(queries)
+        futs = [
+            self.submit_async(QueryRequest(terms=row), block=True) for row in rows
+        ]
+        return [self._unwrap(f).ids for f in futs]
+
+    def query_batch_bitmap(self, queries: np.ndarray) -> np.ndarray:
+        """Legacy entry point: (Q, T) -> (Q, ceil(n_docs/32)) packed uint32."""
+        rows = self._rows(queries)
+        words = (self.n_docs + WORD_BITS - 1) // WORD_BITS
+        out = np.zeros((len(rows), words), dtype=np.uint32)
+        futs = [
+            self.submit_async(QueryRequest(terms=row), block=True) for row in rows
+        ]
+        for j, f in enumerate(futs):
+            out[j] = pack_ids(self._unwrap(f).ids, self.n_docs)
+        return out
+
+    def query_topk(
+        self,
+        queries: np.ndarray,
+        k: int = 10,
+        *,
+        mode: str = "or",
+        required: np.ndarray | None = None,
+    ) -> list[TopKResult]:
+        """Legacy entry point: ranked top-k, bit-identical to the facade."""
+        if mode not in ("or", "and"):
+            raise ValueError(f"mode must be 'or' or 'and', got {mode!r}")
+        rows = self._rows(queries)
+        futs = []
+        for j, row in enumerate(rows):
+            if required is not None:
+                req_mask = np.asarray(required[j], dtype=bool)
+            elif mode == "and":
+                req_mask = row >= 0
+            else:
+                req_mask = None
+            futs.append(
+                self.submit_async(
+                    QueryRequest(terms=row, mode=MODE_RANKED, k=k, required=req_mask),
+                    block=True,
+                )
+            )
+        return [
+            TopKResult(ids=r.ids, scores=r.scores)
+            for r in (self._unwrap(f) for f in futs)
+        ]
+
+    def _rows(self, queries: np.ndarray) -> list[np.ndarray]:
+        q = np.asarray(queries, dtype=np.int32)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (Q, T), got shape {q.shape}")
+        return [q[i] for i in range(q.shape[0])]
+
+    def _unwrap(self, fut: Future) -> QueryResult:
+        r = fut.result()
+        if not r.ok:
+            raise RuntimeError(f"request shed: {r.reason} ({r.detail})")
+        return r
+
+    # ---------------------------------------------------------------- exit
+    def close(self) -> None:
+        """Shed the queue (typed ``Rejected("shutdown")``), stop replicas."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.close()
+        if self._loop_thread.is_alive():
+            self._loop_thread.join(timeout=5.0)
+        self._runners.shutdown(wait=True)
+        self._fan.shutdown(wait=True)
+        for g in self._groups:
+            g.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

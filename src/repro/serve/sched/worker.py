@@ -1,0 +1,135 @@
+"""Process shard worker: one ShardEngine served over a multiprocessing pipe.
+
+The GIL is why the serving front-end sheds threads for processes: the
+probe/verify phase is many small numpy ops, and the measured convoy made
+K=4 thread fan-out ~8x slower than serial.  A process replica owns a full
+``ShardEngine`` for one document partition, rebuilt from the persistent
+shard-store — which is what makes replicas cheap: streams are ``np.memmap``
+arenas, so spawning R replicas of a shard shares one page cache and none of
+them re-encode anything (engines reload ~28x faster than re-encoding).
+
+Protocol (request/response over one ``multiprocessing.Pipe``):
+
+  ("ready", shard_idx)            worker -> parent once the engine is built
+  ("bool", q)                     (B, T) padded int32 -> ("ok", packed bitmap)
+  ("topk", [(terms, required, k, floor), ...])
+                                  -> ("ok", [(ids, scores), ...]) global ids
+  ("ping",)                       -> ("ok", "pong") — forces spawn/warm
+  ("stats",)                      -> ("ok", shard metrics snapshot)
+  ("crash",)                      hard-exits the process (crash-path tests)
+  ("stop",)                       clean shutdown
+  ("err", traceback_str)          any handler failure (worker stays alive)
+
+Workers plan locally: each carries the *global* document frequencies, so
+``plan_batch`` on a worker reproduces the facade plan for its shard exactly
+— term order, run masks and guided/decode routes are identical, which is
+what keeps the process-parallel path bit-identical to in-process serving.
+
+``execute_bool`` / ``execute_topk`` are shared with ``InlineReplica`` so
+the inline (0-replica) scheduler path runs the very same code.
+"""
+from __future__ import annotations
+
+import os
+import traceback
+
+import numpy as np
+
+
+def execute_bool(shard, q: np.ndarray, global_dfs: np.ndarray, verified: bool) -> np.ndarray:
+    """Plan (global term order) + execute one shard's slice of a batch."""
+    from repro.serve.planner import plan_batch
+
+    plan = plan_batch(q, global_dfs, [shard], verified=verified)
+    return shard.execute(q, plan.shard_plans[0], plan.qplans)
+
+
+def execute_topk(shard, items: list) -> list:
+    """Serve [(terms, required, k, floor)] -> [(global ids, scores)].
+
+    Applies the ranked run mask locally (skip when no term has local
+    postings or a required term is absent — same rule as
+    planner.ranked_run_mask), so the session can broadcast one item list to
+    every shard group.
+    """
+    empty = (np.zeros(0, np.int32), np.zeros(0, np.int64))
+    ldfs = shard.local_dfs
+    out = []
+    for terms, required, k, floor in items:
+        terms = tuple(int(t) for t in terms)
+        required = tuple(int(t) for t in required)
+        if (
+            not terms
+            or k <= 0
+            or not any(int(ldfs[t]) for t in terms)
+            or any(int(ldfs[t]) == 0 for t in required)
+        ):
+            out.append(empty)
+            continue
+        r = shard.query_topk_local(terms, int(k), required=required, floor=int(floor))
+        out.append((r.ids, r.scores))
+    return out
+
+
+def _build_shard(spec: dict):
+    """Reconstruct the spec'd ShardEngine from the persistent shard-store."""
+    from repro.core.learned_bloom import LearnedBloom
+    from repro.index.store import load_index
+    from repro.serve.config import ServeConfig
+    from repro.serve.shard import ShardEngine, slice_bloom
+
+    lb = LearnedBloom(
+        params=spec["lb_params"],
+        tau=spec["lb_tau"],
+        backup_keys=spec["lb_backup_keys"],
+        n_docs=int(spec["n_docs"]),
+    )
+    lo, hi = int(spec["lo"]), int(spec["hi"])
+    inv, store = load_index(
+        os.path.join(spec["store_dir"], f"shard-{spec['shard_idx']:04d}"), mmap=True
+    )
+    cfg = ServeConfig(**spec["cfg_kwargs"])
+    shard = ShardEngine(
+        slice_bloom(lb, lo, hi), inv, spec["li_cfg"], cfg, lo=lo, hi=hi, tier2=store
+    )
+    shard.shard_id = int(spec["shard_idx"])
+    return shard, cfg
+
+
+def worker_main(conn, spec: dict) -> None:
+    """Entry point of a spawned process replica (see module docstring)."""
+    try:
+        shard, cfg = _build_shard(spec)
+        global_dfs = np.asarray(spec["global_dfs"])
+        conn.send(("ready", int(spec["shard_idx"])))
+    except Exception:
+        try:
+            conn.send(("err", traceback.format_exc()))
+        finally:
+            return
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        op = msg[0]
+        if op == "stop":
+            return
+        if op == "crash":  # test hook: die mid-batch, no reply, no cleanup
+            os._exit(17)
+        try:
+            if op == "ping":
+                conn.send(("ok", "pong"))
+            elif op == "bool":
+                conn.send(("ok", execute_bool(shard, msg[1], global_dfs, cfg.verified)))
+            elif op == "topk":
+                conn.send(("ok", execute_topk(shard, msg[1])))
+            elif op == "stats":
+                conn.send(("ok", shard.metrics.snapshot()))
+            else:
+                conn.send(("err", f"unknown op {op!r}"))
+        except Exception:
+            try:
+                conn.send(("err", traceback.format_exc()))
+            except (BrokenPipeError, OSError):
+                return

@@ -246,13 +246,13 @@ class ShardEngine:
         score: only strictly better docs can matter here (later shards hold
         larger ids, so floor ties lose)."""
         src = self.ranked
-        scorer = self._batch_scorer() if self.cfg.score_kernel else None
+        scorer = self._batch_scorer() if self.cfg.ranked.score_kernel else None
         with trace.span("shard.topk", shard=self.shard_id, k=int(k),
                         terms=len(tuple(terms))):
             ans = topk_query(
                 src, terms, k,
                 required=required, floor=floor,
-                exhaustive_cutoff=self.cfg.topk_exhaustive_cutoff,
+                exhaustive_cutoff=self.cfg.ranked.topk_exhaustive_cutoff,
                 stats=self.ranked_stats, batch_scorer=scorer,
             )
         return TopKResult(

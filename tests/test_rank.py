@@ -170,7 +170,7 @@ def test_topk_exact_vs_brute_force(system, queries, n_shards):
     _, inv, li, lb, im = system
     oracle = brute_force_topk(inv, im, queries, K)
     eng = BooleanEngine(
-        lb, inv, li, ServeConfig(n_shards=n_shards, topk_exhaustive_cutoff=64)
+        lb, inv, li, ServeConfig(n_shards=n_shards, ranked=dict(topk_exhaustive_cutoff=64))
     )
     _check(eng.query_topk(queries, K), oracle)
     stats = eng.serving_stats()["ranked"]
@@ -189,7 +189,7 @@ def test_topk_k1_matches_k4_bitwise(system, queries):
 def test_topk_small_k(system, queries, k):
     _, inv, li, lb, im = system
     oracle = brute_force_topk(inv, im, queries, k)
-    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, topk_exhaustive_cutoff=0))
+    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, ranked=dict(topk_exhaustive_cutoff=0)))
     _check(eng.query_topk(queries, k), oracle)
 
 
@@ -206,10 +206,10 @@ def test_topk_conjunctive_and_mixed(system, queries):
 def test_topk_pruned_equals_exhaustive(system, queries):
     _, inv, li, lb, _ = system
     pruned = BooleanEngine(
-        lb, inv, li, ServeConfig(n_shards=1, topk_exhaustive_cutoff=0)
+        lb, inv, li, ServeConfig(n_shards=1, ranked=dict(topk_exhaustive_cutoff=0))
     )
     exhaustive = BooleanEngine(
-        lb, inv, li, ServeConfig(n_shards=1, topk_exhaustive_cutoff=1 << 30)
+        lb, inv, li, ServeConfig(n_shards=1, ranked=dict(topk_exhaustive_cutoff=1 << 30))
     )
     _check(pruned.query_topk(queries, K), exhaustive.query_topk(queries, K))
     ps = pruned.serving_stats()["ranked"]
@@ -223,7 +223,7 @@ def test_topk_score_kernel_path(system, queries):
     oracle = brute_force_topk(inv, im, queries, K)
     eng = BooleanEngine(
         lb, inv, li,
-        ServeConfig(n_shards=1, score_kernel=True, topk_exhaustive_cutoff=1 << 30),
+        ServeConfig(n_shards=1, ranked=dict(score_kernel=True, topk_exhaustive_cutoff=1 << 30)),
     )
     _check(eng.query_topk(queries, K), oracle)
 
@@ -273,7 +273,7 @@ def test_select_topk_ordering():
 
 def test_ranked_stats_accounting(system, queries):
     _, inv, li, lb, _ = system
-    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=1, topk_exhaustive_cutoff=0))
+    eng = BooleanEngine(lb, inv, li, ServeConfig(n_shards=1, ranked=dict(topk_exhaustive_cutoff=0)))
     eng.query_topk(queries[:4], K)
     s = eng.serving_stats()
     assert s["ranked"]["queries"] == 4
@@ -282,7 +282,7 @@ def test_ranked_stats_accounting(system, queries):
     eng.reset_stats()
     assert "ranked" not in eng.serving_stats()
     # K>1: 'queries' stays the facade count; shard pairs may exceed it
-    eng4 = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, topk_exhaustive_cutoff=0))
+    eng4 = BooleanEngine(lb, inv, li, ServeConfig(n_shards=4, ranked=dict(topk_exhaustive_cutoff=0)))
     eng4.query_topk(queries[:4], K)
     s4 = eng4.serving_stats()["ranked"]
     assert s4["queries"] == 4
@@ -327,7 +327,7 @@ def test_bm25_kernel_bit_exact():
 # ---------------------------------------------------------------- store v2
 def test_store_roundtrip_with_payloads(system, queries):
     _, inv, li, lb, im = system
-    cfg = ServeConfig(n_shards=4, topk_exhaustive_cutoff=64)
+    cfg = ServeConfig(n_shards=4, ranked=dict(topk_exhaustive_cutoff=64))
     eng = BooleanEngine(lb, inv, li, cfg)
     oracle = brute_force_topk(inv, im, queries, K)
     with tempfile.TemporaryDirectory() as d:

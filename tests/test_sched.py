@@ -1,0 +1,483 @@
+"""Continuous-batching scheduler tests (serve/sched).
+
+Covers the acceptance edges of the scheduler subsystem: legacy-wrapper
+bit-parity (inline and through real process workers), queue saturation
+shedding lowest-priority first, expired deadlines never reaching a worker,
+crash retry-once-then-typed-error (fakes and the real process crash hook),
+all-pad short-circuits, tenant quotas, same-mode batch coalescing, and the
+ServeConfig legacy-kwarg shim.
+"""
+import threading
+import time
+import warnings
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.config import CorpusConfig, LearnedIndexConfig
+from repro.core import fit_thresholds, init_membership
+from repro.data.corpus import synthesize_corpus
+from repro.data.queries import sample_queries, zipf_conjunctions
+from repro.index.build import build_inverted_index
+from repro.obs.metrics import Registry
+from repro.serve import (
+    BooleanEngine,
+    QueryRequest,
+    QueryResult,
+    Rejected,
+    ServeConfig,
+    Session,
+)
+from repro.serve.config import ObsConfig, RankedConfig, SchedConfig
+from repro.serve.sched import (
+    MODE_RANKED,
+    REJECT_DEADLINE,
+    REJECT_QUEUE_FULL,
+    REJECT_SHUTDOWN,
+    REJECT_TENANT_QUOTA,
+    REJECT_WORKER_FAILED,
+    AdmissionQueue,
+    Pending,
+    ProcessReplica,
+    ReplicaGroup,
+    WorkerFailure,
+)
+from repro.serve.sched.replica import ReplicaError
+
+
+# ------------------------------------------------------------------ fixtures
+@pytest.fixture(scope="module")
+def system():
+    corpus = synthesize_corpus(
+        CorpusConfig(n_docs=400, n_terms=1600, avg_doc_len=50, seed=31)
+    )
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(embed_dim=16, truncation_k=16, block_size=64)
+    params, _ = init_membership(jax.random.key(2), li_cfg, corpus.n_terms, corpus.n_docs)
+    lb = fit_thresholds(params, inv)
+    return corpus, inv, li_cfg, lb
+
+
+def _engine(system, **cfg_kwargs):
+    corpus, inv, li_cfg, lb = system
+    return BooleanEngine(lb, inv, li_cfg, ServeConfig(**cfg_kwargs))
+
+
+def _queries(system):
+    corpus, inv, *_ = system
+    q = sample_queries(corpus, 10, max_terms=4, seed=5)
+    rq = zipf_conjunctions(inv.dfs, 8, max_terms=4, seed=9)
+    return q, rq
+
+
+# ------------------------------------------------------- wrapper bit-parity
+def test_legacy_wrappers_bit_identical_inline(system):
+    eng = _engine(system, n_shards=3)
+    q, rq = _queries(system)
+    want_bool = eng.query_batch(q)
+    want_bm = eng.query_batch_bitmap(q)
+    want_or = eng.query_topk(rq, k=10, mode="or")
+    want_and = eng.query_topk(rq, k=10, mode="and")
+    with Session(eng) as s:
+        got_bool = s.query_batch(q)
+        got_bm = s.query_batch_bitmap(q)
+        got_or = s.query_topk(rq, k=10, mode="or")
+        got_and = s.query_topk(rq, k=10, mode="and")
+    for a, b in zip(want_bool, got_bool):
+        assert np.array_equal(a, b)
+    assert got_bm.dtype == np.uint32 and np.array_equal(want_bm, got_bm)
+    for a, b in zip(want_or + want_and, got_or + got_and):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.scores, b.scores)
+
+
+def test_submit_matches_wrapper_and_carries_timing(system):
+    eng = _engine(system, n_shards=2)
+    q, rq = _queries(system)
+    with Session(eng) as s:
+        r = s.submit(QueryRequest(terms=q[0]))
+        assert isinstance(r, QueryResult) and r.ok
+        assert np.array_equal(r.ids, eng.query_batch(q[:1])[0])
+        assert r.scores is None and r.service_us > 0
+        rr = s.submit(QueryRequest(terms=rq[0], mode=MODE_RANKED, k=5))
+        want = eng.query_topk(rq[:1], k=5, mode="or")[0]
+        assert np.array_equal(rr.ids, want.ids)
+        assert np.array_equal(rr.scores, want.scores)
+
+
+def test_legacy_wrappers_bit_identical_process_workers(system, tmp_path):
+    """The acceptance edge: process replicas plan with global dfs, so the
+    parallel path is bit-identical to in-process serving."""
+    eng = _engine(system, n_shards=2, sched=dict(n_replicas=1))
+    q, rq = _queries(system)
+    want_bool = eng.query_batch(q)
+    want_or = eng.query_topk(rq, k=10, mode="or")
+    want_and = eng.query_topk(rq, k=10, mode="and")
+    with Session(eng, store_dir=str(tmp_path)) as s:
+        s.warm()
+        got_bool = s.query_batch(q)
+        got_or = s.query_topk(rq, k=10, mode="or")
+        got_and = s.query_topk(rq, k=10, mode="and")
+    for a, b in zip(want_bool, got_bool):
+        assert np.array_equal(a, b)
+    for a, b in zip(want_or + want_and, got_or + got_and):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.scores, b.scores)
+
+
+# --------------------------------------------------------------- fake parts
+class RecordingReplica:
+    """Answers empty bitmaps / empty heaps; records every dispatch."""
+
+    def __init__(self, n_docs=64):
+        self.calls = []
+        self.inflight = 0
+        self.n_docs = n_docs
+
+    def call(self, msg):
+        self.calls.append(msg)
+        if msg[0] == "bool":
+            words = (self.n_docs + 31) // 32
+            return np.zeros((len(msg[1]), words), dtype=np.uint32)
+        if msg[0] == "topk":
+            return [(np.zeros(0, np.int32), np.zeros(0, np.int64))] * len(msg[1])
+        return "pong"
+
+    def close(self):
+        pass
+
+
+class FlakyReplica(RecordingReplica):
+    """Raises ReplicaError for the first ``fail_n`` calls, then recovers."""
+
+    def __init__(self, fail_n, **kw):
+        super().__init__(**kw)
+        self.fail_n = fail_n
+
+    def call(self, msg):
+        if len(self.calls) < self.fail_n:
+            self.calls.append(msg)
+            raise ReplicaError("injected")
+        return super().call(msg)
+
+
+def _fake_session(eng, replica, **sched_kwargs):
+    eng.cfg.sched = SchedConfig(**sched_kwargs)
+    group = ReplicaGroup(
+        0,
+        [replica],
+        lo=0,
+        n_docs=eng.n_docs,
+        retries=eng.cfg.sched.worker_retries,
+        metrics=eng.metrics,
+    )
+    return Session(eng, replica_groups=[group], auto_start=False)
+
+
+# -------------------------------------------------------- admission control
+def test_saturation_sheds_lowest_priority_first(system):
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+    s = _fake_session(eng, RecordingReplica(), max_queue=2)
+    try:
+        f_low_old = s.submit_async(QueryRequest(terms=q[0], priority=0, tenant="low"))
+        f_low_new = s.submit_async(QueryRequest(terms=q[1], priority=0, tenant="low"))
+        # queue full; a higher-priority arrival displaces the YOUNGEST
+        # lowest-priority entry, preserving the FIFO head
+        f_high = s.submit_async(QueryRequest(terms=q[2], priority=1, tenant="vip"))
+        shed = f_low_new.result(timeout=1)
+        assert isinstance(shed, Rejected) and shed.reason == REJECT_QUEUE_FULL
+        assert shed.tenant == "low"
+        assert not f_low_old.done() and not f_high.done()
+        # next priority-1 arrival displaces the remaining priority-0 entry
+        f_eq = s.submit_async(QueryRequest(terms=q[3], priority=1))
+        assert f_low_old.result(timeout=1).reason == REJECT_QUEUE_FULL
+        assert not f_eq.done()
+        # queue is now all priority 1: an equal-priority arrival is rejected
+        # itself — it may not churn the queue
+        f_eq2 = s.submit_async(QueryRequest(terms=q[4], priority=1))
+        eq2 = f_eq2.result(timeout=1)
+        assert isinstance(eq2, Rejected) and eq2.reason == REJECT_QUEUE_FULL
+        assert not f_high.done() and not f_eq.done()
+        snap = eng.metrics.snapshot()["sched"]
+        assert snap["shed"]["queue_full"] == 3
+    finally:
+        s.close()
+    assert f_high.result(timeout=1).reason == REJECT_SHUTDOWN
+    assert f_eq.result(timeout=1).reason == REJECT_SHUTDOWN
+
+
+def test_tenant_quota_caps_queued_requests(system):
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+    s = _fake_session(eng, RecordingReplica(), tenant_quota=1, max_queue=16)
+    try:
+        f1 = s.submit_async(QueryRequest(terms=q[0], tenant="chatty"))
+        f2 = s.submit_async(QueryRequest(terms=q[1], tenant="chatty"))
+        f3 = s.submit_async(QueryRequest(terms=q[2], tenant="other"))
+        over = f2.result(timeout=1)
+        assert isinstance(over, Rejected) and over.reason == REJECT_TENANT_QUOTA
+        assert over.tenant == "chatty"
+        assert not f1.done() and not f3.done()  # quota is per tenant
+    finally:
+        s.close()
+
+
+def test_expired_deadline_never_reaches_a_worker(system):
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+    replica = RecordingReplica()
+    s = _fake_session(eng, replica)
+    try:
+        f_dead = s.submit_async(QueryRequest(terms=q[0], deadline_ms=1))
+        f_live = s.submit_async(QueryRequest(terms=q[1]))
+        time.sleep(0.02)  # deadline passes while the scheduler is held
+        s._loop_thread.start()
+        shed = f_dead.result(timeout=2)
+        assert isinstance(shed, Rejected) and shed.reason == REJECT_DEADLINE
+        assert f_live.result(timeout=2).ok
+        # the expired request was shed at take_batch: no dispatch carried it
+        assert all(len(msg[1]) == 1 for msg in replica.calls if msg[0] == "bool")
+        assert eng.metrics.snapshot()["sched"]["shed"]["deadline"] == 1
+    finally:
+        s.close()
+
+
+def test_default_deadline_from_config(system):
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+    s = _fake_session(eng, RecordingReplica(), default_deadline_ms=1)
+    try:
+        f = s.submit_async(QueryRequest(terms=q[0]))
+        time.sleep(0.02)
+        s._loop_thread.start()
+        assert f.result(timeout=2).reason == REJECT_DEADLINE
+    finally:
+        s.close()
+
+
+# ------------------------------------------------------------- crash paths
+def test_flaky_replica_retries_once_then_succeeds(system):
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+    replica = FlakyReplica(fail_n=1)
+    s = _fake_session(eng, replica)
+    s._loop_thread.start()
+    try:
+        assert s.submit(QueryRequest(terms=q[0]), timeout=2).ok
+        snap = eng.metrics.snapshot()["sched"]
+        assert snap["worker_retries"] == 1
+        assert snap["worker_failures"] == 0
+    finally:
+        s.close()
+
+
+def test_dead_replica_exhausts_retries_then_typed_rejection(system):
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+    s = _fake_session(eng, FlakyReplica(fail_n=10**6))  # never recovers
+    s._loop_thread.start()
+    try:
+        r = s.submit(QueryRequest(terms=q[0]), timeout=2)
+        assert isinstance(r, Rejected) and r.reason == REJECT_WORKER_FAILED
+        assert eng.metrics.snapshot()["sched"]["worker_failures"] == 1
+    finally:
+        s.close()
+
+
+def test_replica_group_prefers_sibling_on_retry():
+    bad, good = FlakyReplica(fail_n=10**6), RecordingReplica()
+    good.inflight = 5  # least-loaded picks `bad` first...
+    group = ReplicaGroup(0, [bad, good], retries=1)
+    assert group.call(("ping",)) == "pong"  # ...retry lands on the sibling
+    assert len(bad.calls) == 1 and len(good.calls) == 1
+    with pytest.raises(WorkerFailure):
+        ReplicaGroup(0, [FlakyReplica(fail_n=10**6)], retries=1).call(("ping",))
+
+
+def test_process_worker_crash_retry_then_typed_failure(system, tmp_path):
+    """The real crash hook: ("crash",) hard-exits the worker; the group
+    respawns and retries, the retry crashes again, the failure is typed."""
+    eng = _engine(system, n_shards=1, sched=dict(n_replicas=1))
+    with Session(eng, store_dir=str(tmp_path)) as s:
+        s.warm()
+        group = s._groups[0]
+        with pytest.raises(WorkerFailure) as ei:
+            group.call(("crash",))
+        assert ei.value.attempts == 2  # retry budget spent
+        # the group recovered: next dispatch respawns and serves
+        assert group.call(("ping",)) == "pong"
+        snap = eng.metrics.snapshot()["sched"]
+        assert snap["worker_retries"] == 1 and snap["worker_failures"] == 1
+
+
+# ---------------------------------------------------------- short-circuits
+def test_all_pad_and_k0_short_circuit_without_dispatch(system):
+    eng = _engine(system, n_shards=1)
+    replica = RecordingReplica()
+    s = _fake_session(eng, replica)
+    try:
+        pad = np.full(4, -1, np.int32)
+        r = s.submit_async(QueryRequest(terms=pad)).result(timeout=1)
+        assert r.ok and r.ids.size == 0 and r.scores is None
+        r = s.submit_async(QueryRequest(terms=pad, mode=MODE_RANKED)).result(timeout=1)
+        assert r.ok and r.ids.size == 0 and r.scores is not None and r.scores.size == 0
+        r = s.submit_async(
+            QueryRequest(terms=np.array([3], np.int32), mode=MODE_RANKED, k=0)
+        ).result(timeout=1)
+        assert r.ok and r.ids.size == 0
+        assert replica.calls == []  # resolved at submit: nothing was enqueued
+        snap = eng.metrics.snapshot()["sched"]
+        assert snap["short_circuit"] == 3 and snap["enqueued"] == 0
+    finally:
+        s.close()
+
+
+# -------------------------------------------------------------- coalescing
+def _pending(mode="boolean", tenant="default", priority=0, deadline=None, seq=0):
+    req = QueryRequest(terms=np.array([1], np.int32), mode=mode, tenant=tenant,
+                       priority=priority)
+    return Pending(req=req, future=Future(), row=req.terms,
+                   t_submit=time.monotonic(), deadline=deadline, seq=seq)
+
+
+def test_take_batch_coalesces_head_mode_across_queue():
+    queue = AdmissionQueue(SchedConfig(max_batch=16, max_queue=16), Registry())
+    for mode in ["boolean", "boolean", "ranked", "boolean"]:
+        queue.offer(_pending(mode=mode))
+    # the head's mode coalesces past the other mode (FIFO within a mode);
+    # the skipped ranked entry is left at the head for the next round
+    batch = queue.take_batch(16)
+    assert [p.req.mode for p in batch] == ["boolean"] * 3
+    assert [p.seq for p in batch] == sorted(p.seq for p in batch)
+    assert [p.req.mode for p in queue.take_batch(16)] == ["ranked"]
+    # max_batch still caps a same-mode pull mid-queue
+    for mode in ["ranked", "boolean", "ranked", "ranked"]:
+        queue.offer(_pending(mode=mode))
+    assert [p.req.mode for p in queue.take_batch(2)] == ["ranked"] * 2
+    # the un-pulled entries keep arrival order: boolean is now the head
+    assert [p.req.mode for p in queue.take_batch(16)] == ["boolean"]
+    assert [p.req.mode for p in queue.take_batch(16)] == ["ranked"]
+
+
+def test_take_batch_respects_max_batch_and_arrival_order():
+    queue = AdmissionQueue(SchedConfig(max_batch=16, max_queue=64), Registry())
+    for _ in range(5):
+        queue.offer(_pending())
+    batch = queue.take_batch(3)
+    assert len(batch) == 3
+    assert [p.seq for p in batch] == sorted(p.seq for p in batch)  # FIFO
+    assert len(queue.take_batch(16)) == 2
+
+
+def test_continuous_batching_coalesces_arrivals_while_busy(system):
+    """Arrivals during an in-flight dispatch pile up and go out as one batch."""
+    eng = _engine(system, n_shards=1)
+    q, _ = _queries(system)
+
+    gate = threading.Event()
+    class SlowReplica(RecordingReplica):
+        def call(self, msg):
+            if msg[0] == "bool" and not gate.is_set():
+                self.calls.append(msg)
+                gate.wait(timeout=5)  # hold the batch in flight
+                words = (self.n_docs + 31) // 32
+                return np.zeros((len(msg[1]), words), dtype=np.uint32)
+            return super().call(msg)
+
+    def _wait(cond, timeout=5.0):
+        deadline = time.monotonic() + timeout
+        while not cond() and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert cond()
+
+    replica = SlowReplica()
+    s = _fake_session(eng, replica, max_batch=16)
+    s._loop_thread.start()
+    try:
+        # occupy every runner slot with a gated in-flight batch, one at a
+        # time so they cannot coalesce with each other
+        n_slots = 2 * max(1, s.sched_cfg.n_replicas)
+        first = []
+        for i in range(n_slots):
+            first.append(s.submit_async(QueryRequest(terms=q[i])))
+            _wait(lambda: len(replica.calls) == len(first))
+        # all slots busy -> the loop is parked on the slot semaphore and
+        # these five arrivals pile up in the admission queue
+        rest = [s.submit_async(QueryRequest(terms=q[i]))
+                for i in range(n_slots, n_slots + 5)]
+        _wait(lambda: len(s._queue._items) == 5)
+        gate.set()
+        assert all(f.result(timeout=5).ok for f in first)
+        assert all(f.result(timeout=5).ok for f in rest)
+        sizes = [len(msg[1]) for msg in replica.calls if msg[0] == "bool"]
+        # the gated slot-fillers went out alone; the five arrivals went out
+        # as ONE coalesced batch (its row matrix padded up to the 8-row
+        # power-of-two bucket, so count batches, not rows)
+        assert sizes[:n_slots] == [1] * n_slots
+        assert len(sizes) == n_slots + 1 and sizes[n_slots] == 8
+        snap = eng.metrics.snapshot()["sched"]
+        assert snap["batches"] == n_slots + 1
+        assert snap["dispatched"] == n_slots + 5
+    finally:
+        s.close()
+
+
+# ------------------------------------------------------------- config shim
+def test_flat_kwargs_deprecated_but_land_in_subconfigs():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = ServeConfig(payload_bits=4, topk_exhaustive_cutoff=0)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert cfg.ranked.payload_bits == 4
+    assert cfg.ranked.topk_exhaustive_cutoff == 0
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = ServeConfig(ranked=False)  # old boolean flag
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert cfg.ranked.enabled is False and not cfg.ranked
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ServeConfig(shard_workers=4)  # retired knob: warned, ignored
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    with pytest.raises(TypeError):
+        ServeConfig(not_a_knob=1)
+
+
+def test_flat_attributes_forward_to_subconfigs():
+    cfg = ServeConfig()
+    cfg.trace = sentinel = object()
+    assert cfg.obs.trace is sentinel and cfg.trace is sentinel
+    cfg.payload_bits = 4
+    assert cfg.ranked.payload_bits == 4
+    cfg.ranked.score_kernel = True
+    assert cfg.score_kernel is True
+    assert isinstance(cfg.obs, ObsConfig) and isinstance(cfg.ranked, RankedConfig)
+
+
+def test_subconfigs_accept_dicts():
+    cfg = ServeConfig(
+        obs=dict(trace=None),
+        ranked=dict(payload_bits=4),
+        sched=dict(n_replicas=2, max_batch=8),
+    )
+    assert cfg.ranked.payload_bits == 4
+    assert cfg.sched.n_replicas == 2 and cfg.sched.max_batch == 8
+
+
+def test_worker_spec_round_trips_engine_flags():
+    cfg = ServeConfig(
+        n_shards=4,
+        verified=False,
+        ranked=dict(payload_bits=4),
+        sched=dict(n_replicas=3),
+        obs=dict(trace=object()),  # handles must NOT cross the pipe
+    )
+    spec = cfg.worker_spec()
+    clone = ServeConfig(**spec)
+    assert clone.verified is False and clone.n_shards == 4
+    assert clone.ranked.payload_bits == 4
+    assert clone.obs.trace is None  # worker builds its own obs
+    assert clone.sched.n_replicas == 0  # workers execute; the session schedules
