@@ -9,7 +9,12 @@ any regresses beyond the tolerance:
                                 normalized within one run; lower is better)
   BENCH_ranked_topk.json        scored_fraction (postings MaxScore touches vs
                                 exhaustive; deterministic), latency_ratio
-                                (pruned vs exhaustive top-k, same run)
+                                (pruned vs exhaustive top-k, same run),
+                                fused.latency_ratio (fused dispatch vs the
+                                kernel multi-phase pipeline, same run) and
+                                fused.roofline.fraction_of_hbm_roof (achieved
+                                bandwidth vs the HBM roof; gated as a floor —
+                                higher is better)
   BENCH_serve_latency.json      trace_overhead_ratio (traced vs untraced
                                 closed-loop service time, same run),
                                 latency_ratio (open-loop p99/p50 tail
@@ -60,6 +65,10 @@ METRICS = [
     # pruned vs exhaustive top-k wall clock within one run; the floor absorbs
     # scheduling noise, but pruning >1.2x slower than brute force fails
     ("BENCH_ranked_topk.json", "latency_ratio", 1.2),
+    # fused one-dispatch-per-bucket kernel vs the kernel-enabled multi-phase
+    # pipeline, same run (machine-normalized); the floor is the acceptance
+    # bar — the fused path must beat the many-dispatch pipeline anywhere
+    ("BENCH_ranked_topk.json", "fused.latency_ratio", 1.0),
     # span tracer on vs off, interleaved passes within one run; the floor is
     # the design budget — tracing a served batch must stay within ~5%
     ("BENCH_serve_latency.json", "trace_overhead_ratio", 1.05),
@@ -74,6 +83,16 @@ METRICS = [
     # admitted p99 / deadline under 4x-capacity overload: deadline shedding
     # must keep the admitted tail within 2x the budget (shed, don't convoy)
     ("BENCH_serve_sustained.json", "overload.p99_over_deadline", 2.0),
+]
+
+# (file, dotted-path of a higher-is-better metric, absolute cap the limit is
+# never raised above).  Achieved-bandwidth fractions are wall-clock-derived
+# and shift with the runner's memory subsystem, so the cap — not the
+# baseline — is the portable bar: the fused dispatch collapsing to ~zero
+# achieved bandwidth (e.g. silently degrading to per-query dispatches with
+# the same traffic) fails on any machine
+FLOOR_METRICS = [
+    ("BENCH_ranked_topk.json", "fused.roofline.fraction_of_hbm_roof", 1e-5),
 ]
 
 
@@ -119,6 +138,27 @@ def check(baseline_dir: str, fresh_dir: str, tolerance: float = TOLERANCE) -> li
         print(f"{verdict:4s} {fname}:{metric}  baseline={b:.4f}  fresh={f:.4f}  limit={limit:.4f}")
         if f > limit:
             failures.append(f"{fname}:{metric} regressed {f:.4f} > {limit:.4f} (baseline {b:.4f})")
+
+    for fname, metric, cap in FLOOR_METRICS:
+        base, fresh = load(baseline_dir, fname), load(fresh_dir, fname)
+        if base is None:
+            print(f"SKIP {fname}:{metric} — no committed baseline")
+            continue
+        if fresh is None:
+            failures.append(f"{fname} missing from fresh results")
+            continue
+        b, f = _lookup(base, metric), _lookup(fresh, metric)
+        if b is None:
+            print(f"SKIP {fname}:{metric} — metric absent in baseline")
+            continue
+        if f is None:
+            failures.append(f"{fname}:{metric} absent in fresh results")
+            continue
+        limit = min(b * (1 - tolerance), cap)
+        verdict = "FAIL" if f < limit else "ok"
+        print(f"{verdict:4s} {fname}:{metric}  baseline={b:.3e}  fresh={f:.3e}  limit={limit:.3e} (floor)")
+        if f < limit:
+            failures.append(f"{fname}:{metric} collapsed {f:.3e} < {limit:.3e} (baseline {b:.3e})")
     return failures
 
 

@@ -34,6 +34,43 @@ def codec_rows():
     return rows
 
 
+def unpack_rows():
+    """Windowed unpack_bits_at vs full-stream unpack on one packed stream.
+
+    The fused ranked kernel's premise in numbers: an ε-window probe touches
+    ~window*width bits per candidate, so decoding 2048 windows of 8 ranks
+    each should cost a small fraction of unpacking the whole 256K-value
+    stream — the host-side analogue of what compression buys the probe path.
+    """
+    from repro.index.compress import pack_bits, unpack_bits, unpack_bits_at
+
+    rng = np.random.default_rng(11)
+    n, width, n_windows, win = 1 << 18, 9, 2048, 8
+    vals = rng.integers(0, 1 << width, size=n, dtype=np.uint32)
+    words = pack_bits(vals, width)
+    starts = rng.integers(0, n - win, size=n_windows, dtype=np.int64)
+    idx = (starts[:, None] + np.arange(win, dtype=np.int64)[None, :]).ravel()
+
+    def _host_us(fn, reps=5):
+        fn()  # warm caches
+        t0 = time.time()
+        for _ in range(reps):
+            fn()
+        return (time.time() - t0) / reps * 1e6
+
+    full_us = _host_us(lambda: unpack_bits(words, width, n))
+    win_us = _host_us(lambda: unpack_bits_at(words, width, idx))
+    got = unpack_bits_at(words, width, idx)
+    assert np.array_equal(got, vals[idx]), "windowed unpack must match the stream"
+    frac = len(idx) / n
+    return [
+        (f"codec/unpack_full_w{width}", full_us, f"{n} vals, whole stream"),
+        (f"codec/unpack_window_w{width}", win_us,
+         f"{n_windows}x{win} windows ({frac:.3f} of stream) "
+         f"speedup_vs_full={full_us / max(win_us, 1e-9):.1f}x"),
+    ]
+
+
 def _time(fn, *args, reps=3):
     fn(*args)  # compile
     t0 = time.time()

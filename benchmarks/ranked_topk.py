@@ -18,6 +18,25 @@ Emits BENCH_ranked_topk.json:
                             run — machine-normalized, gated by
                             check_regression.py (pruning must never cost
                             more than it saves)
+  fused.latency_ratio       fused one-dispatch seconds / multi-phase seconds
+                            on the *kernel-enabled* multi-phase configuration
+                            (guided_kernel + score_kernel — the hundreds of
+                            small host<->device hops the fused kernel
+                            replaces), same run; machine-normalized and
+                            gated < 1.0
+  fused.latency_ratio_host  fused seconds / the default all-numpy multi-phase
+                            seconds — informational: interpret-mode Pallas
+                            competes with pure numpy only on dispatch count
+  fused.roofline            inverted-index cost model (benchmarks/roofline
+                            index_roofline): stream bytes the ε-window lanes
+                            touched, dispatch device bytes, achieved bytes/s
+                            vs the HBM roof (fraction_of_hbm_roof gated as a
+                            floor in check_regression.py)
+
+Every fused result is asserted bit-identical to the multi-phase results and
+the brute-force oracle, for K=1 and K=4 sharding.  The fused pass also
+writes a Chrome-trace of one traced batch (kernel.fused_query spans) to
+ranked_topk.fused.trace.json for the CI artifact.
 """
 from __future__ import annotations
 
@@ -27,6 +46,7 @@ import time
 import numpy as np
 
 BENCH_PATH = "BENCH_ranked_topk.json"
+FUSED_TRACE_PATH = "ranked_topk.fused.trace.json"
 
 N_DOCS = 4096
 N_TERMS = 5000
@@ -78,11 +98,14 @@ def ranked_rows(write_json: bool = True):
 
     per_k: dict[str, dict] = {}
     pruned_seconds = None
+    multiphase_results = None
     for k in K_SWEEP:
         eng = BooleanEngine(lb, inv, li_cfg, ServeConfig(n_shards=k))
         for sh in eng.shards:
             sh.ensure_payloads()  # quantize+pack is startup cost, not timed
         best, results = run(eng)
+        if k == 1:
+            multiphase_results = results
         for r, e in zip(results, oracle):
             assert np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores), (
                 f"K={k} must be bit-identical to brute-force BM25"
@@ -110,6 +133,81 @@ def ranked_rows(write_json: bool = True):
     for r, e in zip(exh_results, oracle):
         assert np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores)
 
+    # ---- fused one-dispatch kernel: exactness at K=1/K=4, then the ratios
+    from repro.obs import Tracer
+
+    fused_secs = {}
+    fused_stats = None
+    for k in K_SWEEP:
+        eng_f = BooleanEngine(
+            lb, inv, li_cfg, ServeConfig(n_shards=k, ranked=dict(fused_kernel=True))
+        )
+        for sh in eng_f.shards:
+            sh.ensure_payloads()
+        best_f, results_f = run(eng_f)
+        fused_secs[k] = best_f
+        for r, e, m in zip(results_f, oracle, multiphase_results):
+            assert np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores), (
+                f"fused K={k} must be bit-identical to brute-force BM25"
+            )
+            assert np.array_equal(r.ids, m.ids) and np.array_equal(r.scores, m.scores), (
+                f"fused K={k} must be bit-identical to the multi-phase path"
+            )
+        if k == 1:
+            eng_f.reset_stats()
+            t0 = time.time()
+            eng_f.query_topk(queries, TOP_K)  # accounting pass for the roofline
+            fused_acct_seconds = time.time() - t0
+            fused_stats = eng_f.metrics.snapshot()["ranked"]
+            tracer = Tracer()  # one traced batch -> the CI fused-trace artifact
+            eng_f.cfg.trace = tracer
+            eng_f.query_topk(queries, TOP_K)
+            eng_f.cfg.trace = None
+            tracer.save(FUSED_TRACE_PATH)
+
+    # the configuration the fused kernel replaces: multi-phase with its probe
+    # and scoring stages already on (interpret-mode) Pallas — hundreds of
+    # small dispatches per batch vs one fused dispatch
+    dev = BooleanEngine(
+        lb, inv, li_cfg,
+        ServeConfig(n_shards=1, guided_kernel=True, ranked=dict(score_kernel=True)),
+    )
+    for sh in dev.shards:
+        sh.ensure_payloads()
+    dev_seconds, dev_results = run(dev)
+    for r, e in zip(dev_results, oracle):
+        assert np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores)
+
+    try:
+        from benchmarks.roofline import index_roofline
+    except ImportError:  # script mode: benchmarks/ itself is sys.path[0]
+        from roofline import index_roofline
+
+    fused_roof = index_roofline(
+        fused_stats["fused_stream_bytes"],
+        fused_stats["fused_device_bytes"],
+        fused_stats["fused_lanes"],
+        fused_acct_seconds,
+        N_QUERIES,
+    )
+    fused = {
+        "seconds": fused_secs[1],
+        "qps": N_QUERIES / fused_secs[1],
+        "per_k_seconds": {str(k): fused_secs[k] for k in K_SWEEP},
+        # gated: one dispatch must beat the many-dispatch kernel pipeline
+        "latency_ratio": fused_secs[1] / dev_seconds,
+        "kernel_multiphase_seconds": dev_seconds,
+        # informational: interpret-mode kernel vs the all-numpy host path
+        "latency_ratio_host": fused_secs[1] / pruned_seconds,
+        "fused_queries": fused_stats["fused_queries"],
+        "fused_lanes": fused_stats["fused_lanes"],
+        "roofline": fused_roof,
+    }
+    assert fused["latency_ratio"] < 1.0, (
+        f"fused dispatch must beat the kernel multi-phase pipeline, got "
+        f"{fused['latency_ratio']:.3f}"
+    )
+
     scored_fraction = per_k["1"]["scored_fraction"]
     latency_ratio = pruned_seconds / exh_seconds
     traj = {
@@ -127,6 +225,7 @@ def ranked_rows(write_json: bool = True):
         "scored_fraction": scored_fraction,
         "latency_ratio": latency_ratio,
         "exhaustive": {"seconds": exh_seconds, "qps": N_QUERIES / exh_seconds},
+        "fused": fused,
     }
     assert scored_fraction < 0.5, (
         f"MaxScore pruning must score < 0.5x of exhaustive, got {scored_fraction:.3f}"
@@ -139,6 +238,13 @@ def ranked_rows(write_json: bool = True):
     rows.append(("ranked/exhaustive", 1e6 * exh_seconds / N_QUERIES,
                  f"qps={N_QUERIES / exh_seconds:.1f}"))
     rows.append(("ranked/latency_ratio", 0.0, f"pruned_vs_exhaustive={latency_ratio:.3f}"))
+    rows.append(("ranked/fused", 1e6 * fused_secs[1] / N_QUERIES,
+                 f"qps={fused['qps']:.1f}_vs_kernel_multiphase={fused['latency_ratio']:.3f}"
+                 f"_vs_host={fused['latency_ratio_host']:.3f}"))
+    rows.append(("ranked/fused_roofline", 1e6 * fused_roof["roofline_s"],
+                 f"dominant={fused_roof['dominant']}"
+                 f"_hbm_frac={fused_roof['fraction_of_hbm_roof']:.2e}"
+                 f"_stream_bytes={fused_roof['stream_bytes']}"))
     if write_json:
         with open(BENCH_PATH, "w") as f:
             json.dump(traj, f, indent=2)

@@ -84,6 +84,55 @@ def analyze(record: dict[str, Any]) -> dict[str, Any] | None:
     return out
 
 
+# ------------------------------------------------------ inverted-index model
+# Cost model for the fused ranked-query dispatch (kernels.fused_query): the
+# serving engine's RankedStats counts the packed stream bytes its ε-window
+# probe lanes touch and the device array traffic of each dispatch
+# (fused_stream_bytes / fused_device_bytes), and every probe lane costs a
+# near-constant number of integer VPU ops (segment line eval, two word-pair
+# unpacks, compare, accumulate).  Positioning achieved bytes/s against the
+# HBM roof answers the ISSUE's question directly: is the fused path bound by
+# memory bandwidth (good — the paper's compression translates to speed) or
+# still by dispatch/bookkeeping overhead?
+PEAK_INT_OPS = 3.2e12  # rough int32 VPU throughput per chip (8x939 MHz lanes)
+INT_OPS_PER_LANE = 24  # line eval + 2 unpacks + compare + select + accumulate
+
+
+def index_roofline(
+    stream_bytes: int,
+    device_bytes: int,
+    lanes: int,
+    seconds: float,
+    queries: int,
+) -> dict[str, float]:
+    """Fused ranked dispatch accounting -> position vs the HBM-bandwidth roof.
+
+    ``stream_bytes`` are the packed correction/payload words the ε-windows
+    touched (the paper-facing number: what compression makes small);
+    ``device_bytes`` the dispatch's array traffic (what HBM actually moves);
+    ``lanes`` the probe lanes evaluated; ``seconds`` the measured wall time
+    of the ranked pass serving ``queries`` queries.
+    """
+    seconds = max(seconds, 1e-12)
+    memory_s = device_bytes / HBM_BW
+    compute_s = lanes * INT_OPS_PER_LANE / PEAK_INT_OPS
+    roof_s = max(memory_s, compute_s)
+    achieved = device_bytes / seconds
+    return {
+        "stream_bytes": int(stream_bytes),
+        "device_bytes": int(device_bytes),
+        "lanes": int(lanes),
+        "seconds": seconds,
+        "bytes_per_query": device_bytes / max(queries, 1),
+        "hbm_roof_s": memory_s,
+        "int_roof_s": compute_s,
+        "roofline_s": roof_s,
+        "dominant": "memory" if memory_s >= compute_s else "compute",
+        "achieved_bytes_per_s": achieved,
+        "fraction_of_hbm_roof": achieved / HBM_BW,
+    }
+
+
 def rows_from_file(path: str):
     with open(path) as f:
         records = json.load(f)

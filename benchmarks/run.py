@@ -26,7 +26,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main() -> None:
     from benchmarks.paper_figs import _collections, fig1_rows, fig2_rows, fig3_rows
-    from benchmarks.codec_kernels import codec_rows, kernel_rows
+    from benchmarks.codec_kernels import codec_rows, kernel_rows, unpack_rows
     from benchmarks.guided_intersect import guided_rows
     from benchmarks.learned_postings import learned_rows
     from benchmarks.ranked_topk import ranked_rows
@@ -41,6 +41,7 @@ def main() -> None:
     rows += fig2_rows(colls)
     rows += fig3_rows(colls)
     rows += codec_rows()
+    rows += unpack_rows()
     rows += learned_rows()
     rows += guided_rows()
     rows += sharded_rows()

@@ -26,6 +26,10 @@ Emits BENCH_serve_latency.json:
   trace_overhead_ratio              traced / untraced service time (gated)
   latency_ratio                     open-loop p99/p50 — tail amplification
                                     from queueing, machine-normalized (gated)
+  fused.roofline                    the ranked workload re-served through the
+                                    fused kernel (ServeConfig.fused_kernel),
+                                    positioned by benchmarks/roofline
+                                    index_roofline against the HBM roof
 plus serve_latency.trace.json (Chrome-trace of the final traced pass; open
 in ui.perfetto.dev) and serve_latency.probes.jsonl (routed-probe records).
 
@@ -180,6 +184,31 @@ def latency_rows(write_json: bool = True):
     wall = time.perf_counter() - t_wall
     p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
 
+    # ---- fused ranked path: the same ranked workload through the fused
+    # kernel (ServeConfig.fused_kernel), positioned against the HBM roof
+    try:
+        from benchmarks.roofline import index_roofline
+    except ImportError:  # script mode: benchmarks/ itself is sys.path[0]
+        from roofline import index_roofline
+
+    feng = BooleanEngine(
+        lb, inv, li_cfg, ServeConfig(n_shards=N_SHARDS, ranked=dict(fused_kernel=True))
+    )
+    for sh in feng.shards:
+        sh.ensure_payloads()
+    for r, e in zip(feng.query_topk(ranked_q, TOPK), oracle):
+        assert np.array_equal(r.ids, e.ids) and np.array_equal(r.scores, e.scores), \
+            "fused ranked serving must match brute-force BM25"
+    feng.reset_stats()
+    t0 = time.perf_counter()
+    feng.query_topk(ranked_q, TOPK)  # accounting pass (jit warmed above)
+    fused_seconds = time.perf_counter() - t0
+    fs = feng.metrics.snapshot()["ranked"]
+    fused_roof = index_roofline(
+        fs["fused_stream_bytes"], fs["fused_device_bytes"], fs["fused_lanes"],
+        fused_seconds, N_RANKED,
+    )
+
     metrics_lat = eng.metrics.snapshot().get("latency", {})
     traj = {
         "workload": {
@@ -211,6 +240,12 @@ def latency_rows(write_json: bool = True):
         # open-loop tail amplification (queueing + service variance) within
         # one run; a generous floor absorbs scheduler noise on shared CI
         "latency_ratio": p99 / p50,
+        "fused": {
+            "seconds": fused_seconds,
+            "fused_queries": fs["fused_queries"],
+            "fused_lanes": fs["fused_lanes"],
+            "roofline": fused_roof,
+        },
         "engine_histograms": metrics_lat,
     }
     rows = [
@@ -218,6 +253,9 @@ def latency_rows(write_json: bool = True):
         ("serve_latency/qps", 0.0,
          f"qps={traj['open_loop']['qps']:.1f}_offered={rate:.1f}"),
         ("serve_latency/trace_overhead", 0.0, f"ratio={trace_overhead:.3f}"),
+        ("serve_latency/fused_roofline", 1e6 * fused_roof["roofline_s"],
+         f"dominant={fused_roof['dominant']}"
+         f"_hbm_frac={fused_roof['fraction_of_hbm_roof']:.2e}"),
     ]
     if write_json:
         with open(BENCH_PATH, "w") as f:

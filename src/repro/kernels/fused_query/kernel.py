@@ -1,0 +1,128 @@
+"""Fused ranked-query kernel: candidates -> ε-window probe -> top-k, one dispatch.
+
+The multi-phase ranked path answers a batch with five host<->device hops:
+guided ε-window probes, correction unpack, payload unpack, impact summation,
+and host-side top-k selection.  This kernel collapses the tail of that
+pipeline into a single Pallas dispatch over (query, term, candidate, window)
+tiles: per lane it evaluates the rank-model segment line (same
+single-multiply float32 + rint formula as plm_decode / guided_search),
+unpacks the bit-packed correction *and* payload words in-register from
+pre-gathered word pairs (the shift/or/mask math of
+repro.index.compress.unpack_bits_at, width < 32), compares the reconstructed
+doc id against the candidate, and accumulates int32 BM25 impact sums.  The
+per-query top-k heap lives in VMEM scratch: K peeled argmax rounds over the
+surviving scores.  Candidates arrive sorted ascending, and argmax takes the
+first maximum, so score ties resolve to the smaller doc id — bit-identical
+to rank.score.select_topk's (score desc, id asc) ordering.
+
+Shapes (Q = padded queries, T = tail terms, C = candidates, W = window):
+  per (Q, T):       width u32, corr_min i32
+  per (Q, T, C):    rlo, wlen, segstart, base i32; slope f32
+  per (Q, T, C, W): corr/payload lo+hi word pairs u32
+  per (Q, C):       candidate ids (pad = NEVER), partial scores i32
+  per (Q, 1):       score floor i32
+Outputs (Q, K) ids / scores; empty slots are id -1, score 0 (floor >= 0 and
+quantized impacts >= 1 guarantee real hits score > 0).
+
+MaxScore-style early termination happens at two levels: the host bridge
+(ops.py) peels essential terms and drops candidates whose per-segment upper
+bound cannot reach the running threshold, and in-kernel the floor mask
+zeroes lanes that cannot enter the heap.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+B_BLK = 4  # query rows per grid step
+NEVER = 1 << 30  # candidate-pad sentinel: above any doc id a stream can hold
+
+
+def _unpack(lo, hi, shift, mask):
+    """In-register word-pair unpack, the unpack_bits_at little-endian layout."""
+    up = jnp.where(shift > jnp.uint32(0), hi << (jnp.uint32(32) - shift), jnp.uint32(0))
+    return ((lo >> shift) | up) & mask
+
+
+def _make_kernel(k: int, pbits: int):
+    def _kernel(width_ref, cmin_ref, rlo_ref, wlen_ref, start_ref, base_ref,
+                slope_ref, clo_ref, chi_ref, plo_ref, phi_ref, cand_ref,
+                part_ref, floor_ref, ids_ref, scores_ref, alive_ref):
+        B, T, C, W = clo_ref.shape
+        j = jax.lax.broadcasted_iota(jnp.int32, (B, T, C, W), 3)
+        ranks = rlo_ref[...][..., None] + j
+        # guided ε-window search: evaluate the segment line at every rank
+        di = (ranks - start_ref[...][..., None]).astype(jnp.float32)
+        pred = base_ref[...][..., None] + jnp.rint(
+            slope_ref[...][..., None] * di
+        ).astype(jnp.int32)
+        w = width_ref[...].astype(jnp.uint32)[:, :, None, None]
+        cmask = (jnp.uint32(1) << w) - jnp.uint32(1)
+        cshift = (ranks.astype(jnp.uint32) * w) % jnp.uint32(32)
+        corr = _unpack(clo_ref[...], chi_ref[...], cshift, cmask).astype(jnp.int32)
+        ids = pred + corr + cmin_ref[...][:, :, None, None]
+        valid = j < wlen_ref[...][..., None]
+        # list ids strictly increase inside a window: at most one lane matches
+        eq = valid & (ids == cand_ref[...][:, None, :, None])
+        pshift = (ranks.astype(jnp.uint32) * jnp.uint32(pbits)) % jnp.uint32(32)
+        pmask = jnp.uint32((1 << pbits) - 1)
+        imp = _unpack(plo_ref[...], phi_ref[...], pshift, pmask).astype(jnp.int32)
+        score = part_ref[...] + jnp.where(eq, imp, 0).sum(axis=3).sum(axis=1)
+        # top-k heap in scratch: floor-mask, then K peeled argmax rounds
+        alive_ref[...] = jnp.where(score > floor_ref[...], score, 0)
+        cand = cand_ref[...]
+        ci = jax.lax.broadcasted_iota(jnp.int32, (B, C), 1)
+        cols_i, cols_s = [], []
+        for _ in range(k):
+            m = alive_ref[...]
+            best = jnp.argmax(m, axis=1).astype(jnp.int32)
+            oh = ci == best[:, None]
+            val = jnp.where(oh, m, 0).sum(axis=1)
+            sid = jnp.where(val > 0, jnp.where(oh, cand, 0).sum(axis=1), -1)
+            alive_ref[...] = jnp.where(oh, 0, m)
+            cols_i.append(sid)
+            cols_s.append(val)
+        ids_ref[...] = jnp.stack(cols_i, axis=1)
+        scores_ref[...] = jnp.stack(cols_s, axis=1)
+
+    return _kernel
+
+
+@partial(jax.jit, static_argnames=("k", "pbits", "interpret"))
+def fused_topk(width, cmin, rlo, wlen, start, base, slope, clo, chi, plo, phi,
+               cand, part, floor, *, k: int, pbits: int, interpret: bool = True):
+    """One dispatch: (Q, T, C, W) probe tiles -> (Q, k) top-k ids + scores."""
+    Q, T, C = rlo.shape
+    W = clo.shape[3]
+    pad = (-Q) % B_BLK
+    if pad:
+        def p(a):
+            return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        width, cmin, rlo, wlen, start, base, slope, clo, chi, plo, phi, \
+            cand, part, floor = map(p, (width, cmin, rlo, wlen, start, base,
+                                        slope, clo, chi, plo, phi, cand, part,
+                                        floor))
+    Qp = Q + pad
+    qt = pl.BlockSpec((B_BLK, T), lambda i: (i, 0))
+    qtc = pl.BlockSpec((B_BLK, T, C), lambda i: (i, 0, 0))
+    qtcw = pl.BlockSpec((B_BLK, T, C, W), lambda i: (i, 0, 0, 0))
+    qc = pl.BlockSpec((B_BLK, C), lambda i: (i, 0))
+    q1 = pl.BlockSpec((B_BLK, 1), lambda i: (i, 0))
+    qk = pl.BlockSpec((B_BLK, k), lambda i: (i, 0))
+    ids, scores = pl.pallas_call(
+        _make_kernel(k, pbits),
+        grid=(Qp // B_BLK,),
+        in_specs=[qt, qt, qtc, qtc, qtc, qtc, qtc, qtcw, qtcw, qtcw, qtcw,
+                  qc, qc, q1],
+        out_specs=[qk, qk],
+        out_shape=[jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+                   jax.ShapeDtypeStruct((Qp, k), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((B_BLK, C), jnp.int32)],
+        interpret=interpret,
+    )(width, cmin, rlo, wlen, start, base, slope, clo, chi, plo, phi, cand,
+      part, floor)
+    return ids[:Q], scores[:Q]

@@ -1,0 +1,53 @@
+"""Pure-numpy oracle for the fused ranked-query kernel.
+
+Mirrors kernel._make_kernel lane for lane on the same padded arrays: segment
+line in float32 with a single multiply + rint, word-pair shift/or/mask
+unpack for corrections and payloads, floor mask, then K peeled argmax
+rounds.  Used by the tests for kernel-vs-ref bit identity and by ops.py as
+the use_kernel=False host path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.fused_query.kernel import NEVER  # noqa: F401  (shared sentinel)
+
+
+def _unpack(lo, hi, shift, mask):
+    up = np.where(shift > 0, hi.astype(np.uint64) << (32 - shift), 0)
+    return ((lo.astype(np.uint64) >> shift) | up) & mask
+
+
+def fused_topk_ref(width, cmin, rlo, wlen, start, base, slope, clo, chi, plo,
+                   phi, cand, part, floor, *, k: int, pbits: int):
+    """(Q, T, C, W) probe tiles -> (Q, k) top-k ids + scores, numpy."""
+    Q, T, C, W = clo.shape
+    j = np.arange(W, dtype=np.int64)[None, None, None, :]
+    ranks = rlo[..., None].astype(np.int64) + j
+    di = (ranks - start[..., None]).astype(np.float32)
+    pred = base[..., None].astype(np.int64) + np.rint(
+        slope[..., None].astype(np.float32) * di
+    ).astype(np.int64)
+    w = width.astype(np.uint64)[:, :, None, None]
+    cmask = (np.uint64(1) << w) - np.uint64(1)
+    cshift = (ranks.astype(np.uint64) * w) % np.uint64(32)
+    corr = _unpack(clo, chi, cshift, cmask).astype(np.int64)
+    ids = pred + corr + cmin[:, :, None, None].astype(np.int64)
+    valid = j < wlen[..., None]
+    eq = valid & (ids == cand[:, None, :, None].astype(np.int64))
+    pshift = (ranks.astype(np.uint64) * np.uint64(pbits)) % np.uint64(32)
+    pmask = np.uint64((1 << pbits) - 1)
+    imp = _unpack(plo, phi, pshift, pmask).astype(np.int64)
+    score = part.astype(np.int64) + np.where(eq, imp, 0).sum(axis=3).sum(axis=1)
+    alive = np.where(score > floor.astype(np.int64), score, 0)
+    out_ids = np.full((Q, k), -1, np.int32)
+    out_scores = np.zeros((Q, k), np.int32)
+    cand64 = cand.astype(np.int64)
+    for i in range(k):
+        best = np.argmax(alive, axis=1)
+        val = alive[np.arange(Q), best]
+        hit = val > 0
+        out_ids[hit, i] = cand64[np.arange(Q), best][hit].astype(np.int32)
+        out_scores[hit, i] = val[hit].astype(np.int32)
+        alive[np.arange(Q), best] = 0
+    return out_ids, out_scores

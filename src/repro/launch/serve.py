@@ -25,6 +25,7 @@ requests come back as typed Rejected, never silently dropped).
   PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --index-dir /tmp/idx
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10 --fused
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --replicas 1 \\
       --deadline-ms 100
   PYTHONPATH=src python -m repro.launch.serve --trace-out serve.trace.json \\
@@ -46,7 +47,7 @@ from repro.data.loader import membership_batches
 from repro.data.queries import brute_force_answers, sample_queries, zipf_disjunctions
 from repro.index.build import build_inverted_index
 from repro.obs import ProbeLog, Tracer
-from repro.serve import BooleanEngine, ServeConfig
+from repro.serve import BooleanEngine, RankedConfig, ServeConfig
 from repro.train import init_train_state, make_train_step
 
 
@@ -90,6 +91,12 @@ def main():
     ap.add_argument("--topk", type=int, default=10,
                     help="also serve a ranked top-K disjunctive batch "
                          "(0 disables the ranked path)")
+    ap.add_argument("--fused", action="store_true",
+                    help="answer each shard's ranked batch with one fused "
+                         "Pallas dispatch (kernels.fused_query) instead of "
+                         "the multi-phase probe/unpack/score pipeline "
+                         "(disables the small-query exhaustive shortcut so "
+                         "the kernel actually runs on demo-sized corpora)")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace JSON of every served batch here")
     ap.add_argument("--probe-log", default=None,
@@ -115,7 +122,12 @@ def main():
     probe_log = ProbeLog(args.probe_log) if args.probe_log else None
     cfg = ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
                       use_kernel=args.use_kernel, n_shards=args.shards,
-                      obs=dict(trace=tracer, probe_log=probe_log))
+                      obs=dict(trace=tracer, probe_log=probe_log),
+                      ranked=dict(fused_kernel=args.fused,
+                                  # the exhaustive shortcut would swallow every
+                                  # demo-sized query before the fused dispatch
+                                  topk_exhaustive_cutoff=0 if args.fused
+                                  else RankedConfig.topk_exhaustive_cutoff))
     eng = BooleanEngine(lb, inv, li_cfg, cfg)
     if args.index_dir:
         t0 = time.time()
@@ -163,6 +175,10 @@ def main():
               f"{dt:.2f} ms/query, exact-vs-BM25-brute-force={ok}, "
               f"scored {rs['touched_postings']}/{rs['exhaustive_postings']} "
               f"postings (fraction {rs['scored_fraction']:.3f})")
+        if args.fused:
+            print(f"[serve] fused kernel: {rs['fused_queries']} shard-queries "
+                  f"in one-dispatch batches, {rs['fused_lanes']} probe lanes, "
+                  f"{rs['fused_stream_bytes']} stream bytes touched")
         assert ok, "ranked serving must match brute-force BM25"
 
     if args.replicas is not None:

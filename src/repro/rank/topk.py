@@ -71,6 +71,14 @@ class RankedStats:
     scored_postings: int = 0  # postings decoded + scored in full
     probed_postings: int = 0  # candidate probes into non-essential terms
     exhaustive_postings: int = 0  # what exhaustive scoring would have touched
+    # fused-kernel accounting (kernels.fused_query): queries whose probe tail
+    # went through the one-dispatch path, its probe lanes, the packed stream
+    # bytes those lanes touched, and the dispatch's device array traffic —
+    # the inputs to the benchmarks' inverted-index roofline model
+    fused_queries: int = 0
+    fused_lanes: int = 0
+    fused_stream_bytes: int = 0
+    fused_device_bytes: int = 0
 
     def touched(self) -> int:
         return self.scored_postings + self.probed_postings
@@ -78,7 +86,8 @@ class RankedStats:
     def as_dict(self) -> dict[str, int | float]:
         d = {k: int(getattr(self, k)) for k in (
             "queries", "exhaustive_queries", "scored_postings",
-            "probed_postings", "exhaustive_postings",
+            "probed_postings", "exhaustive_postings", "fused_queries",
+            "fused_lanes", "fused_stream_bytes", "fused_device_bytes",
         )}
         d["touched_postings"] = self.touched()
         d["scored_fraction"] = (

@@ -255,6 +255,11 @@ class BooleanEngine:
             with trace.span("serve.plan"):
                 qplans = plan_ranked(q, self._global_dfs, mode=mode, required=required)
                 runs = [ranked_run_mask(qplans, sh.local_dfs) for sh in active]
+            # a shard whose run mask is all-empty contributes nothing to any
+            # heap: drop it here instead of re-deriving floors against it
+            live = [(sh, run) for sh, run in zip(active, runs) if run.any()]
+            if self.cfg.ranked.fused_kernel:
+                return self._query_topk_fused(qplans, live, k, empty)
             for i, qp in enumerate(qplans):
                 if qp.dead:
                     out.append(empty)
@@ -263,7 +268,7 @@ class BooleanEngine:
                 heap = empty
                 # ascending doc ranges + ascending-id tie break make the floor
                 # a strict bar: a later shard's tie can never displace the heap
-                for sh, run in zip(active, runs):
+                for sh, run in live:
                     if not run[i]:
                         continue
                     floor = int(heap.scores[k - 1]) if len(heap.scores) == k else 0
@@ -284,6 +289,41 @@ class BooleanEngine:
                 self._observe_us("topk_query_us", t_query)
                 out.append(heap)
         return out
+
+    def _query_topk_fused(self, qplans, live, k: int, empty) -> list[TopKResult]:
+        """Fused-kernel ranked execution: shards outer, one batched dispatch
+        per shard (``shard.query_topk_batch``), heap floors forwarded between
+        shards exactly as the per-query loop does — shard doc ranges ascend,
+        so each shard sees the floors the previous shards established.
+        Bit-identical to the multi-phase loop (asserted in tests/benchmarks).
+        """
+        t_batch = time.perf_counter_ns()
+        heaps = [empty] * len(qplans)
+        n_live_q = sum(1 for qp in qplans if not qp.dead)
+        for sh, run in live:
+            idx = [i for i, qp in enumerate(qplans) if not qp.dead and run[i]]
+            if not idx:
+                continue
+            items = []
+            for i in idx:
+                floor = (int(heaps[i].scores[k - 1])
+                         if len(heaps[i].scores) == k else 0)
+                items.append((qplans[i].terms, k, qplans[i].required, floor))
+            parts = sh.query_topk_batch(items)
+            for i, part in zip(idx, parts):
+                if len(part.ids) == 0:
+                    continue
+                with trace.span("serve.heap_merge", query=i, shard=sh.shard_id):
+                    heaps[i] = select_topk(
+                        np.concatenate([heaps[i].ids, part.ids]),
+                        np.concatenate([heaps[i].scores, part.scores]),
+                        k,
+                    )
+        if n_live_q:  # batch wall spread over queries: same metric, one pass
+            per_q = (time.perf_counter_ns() - t_batch) // n_live_q
+            for _ in range(n_live_q):
+                self._observe_us("topk_query_us", time.perf_counter_ns() - per_q)
+        return heaps
 
     def _padded(self, queries: np.ndarray) -> np.ndarray:
         q = np.asarray(queries, dtype=np.int32)
@@ -420,7 +460,9 @@ class BooleanEngine:
         agg = RankedStats(**{
             f: sum(int(getattr(r, f)) for r in per)
             for f in ("queries", "exhaustive_queries", "scored_postings",
-                      "probed_postings", "exhaustive_postings")
+                      "probed_postings", "exhaustive_postings",
+                      "fused_queries", "fused_lanes", "fused_stream_bytes",
+                      "fused_device_bytes")
         }).as_dict()
         # shard counters tally (query, shard) pairs; report the facade's
         # query count on top so per-query averages come out right

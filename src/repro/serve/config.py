@@ -53,6 +53,10 @@ class RankedConfig:
     # and score exhaustively (still exact); 0 forces pruning everywhere
     topk_exhaustive_cutoff: int = 2048
     score_kernel: bool = False  # batch exhaustive scoring on the Pallas kernel
+    # answer each shard's ranked batch with one fused Pallas dispatch
+    # (kernels.fused_query) instead of the multi-phase probe/unpack/score/
+    # select pipeline; bit-identical, with the multi-phase path as oracle
+    fused_kernel: bool = False
 
     def __bool__(self) -> bool:  # legacy truthiness: `if cfg.ranked:`
         return self.enabled
@@ -84,7 +88,25 @@ _LEGACY = {
     "payload_bits": ("ranked", "payload_bits"),
     "topk_exhaustive_cutoff": ("ranked", "topk_exhaustive_cutoff"),
     "score_kernel": ("ranked", "score_kernel"),
+    "fused_kernel": ("ranked", "fused_kernel"),
 }
+
+# (filename, lineno, message) triples that already warned: the flat-kwarg
+# shim fires once per *call site*, not on every sub-config rebuild — worker
+# respawns and per-request reconstruction otherwise flood test output
+_WARNED_SITES: set[tuple] = set()
+
+
+def _warn_once(message: str, *, stacklevel: int) -> None:
+    """DeprecationWarning deduped by the frame that called the constructor."""
+    import sys
+
+    fr = sys._getframe(stacklevel)
+    site = (fr.f_code.co_filename, fr.f_lineno, message)
+    if site in _WARNED_SITES:
+        return
+    _WARNED_SITES.add(site)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
 
 
 def _coerce(cls, value):
@@ -131,21 +153,19 @@ class ServeConfig:
         self.ranked = _coerce(RankedConfig, ranked)
         self.sched = _coerce(SchedConfig, sched)
         if legacy.pop("shard_workers", None) is not None:
-            warnings.warn(
+            _warn_once(
                 "ServeConfig(shard_workers=) is retired: the thread-pool "
                 "fan-out is superseded by the serve.sched scheduler "
                 "(ServeConfig.sched.n_replicas process replicas)",
-                DeprecationWarning,
                 stacklevel=2,
             )
         unknown = set(legacy) - set(_LEGACY) - {"ranked"}
         if unknown:
             raise TypeError(f"unknown ServeConfig kwarg(s): {sorted(unknown)}")
         if legacy:
-            warnings.warn(
+            _warn_once(
                 f"flat ServeConfig kwarg(s) {sorted(legacy)} are deprecated; "
                 "use the nested sub-configs (ServeConfig.obs / .ranked)",
-                DeprecationWarning,
                 stacklevel=2,
             )
         for k, v in legacy.items():
@@ -213,6 +233,14 @@ class ServeConfig:
     def score_kernel(self, v: bool):
         self.ranked.score_kernel = v
 
+    @property
+    def fused_kernel(self) -> bool:
+        return self.ranked.fused_kernel
+
+    @fused_kernel.setter
+    def fused_kernel(self, v: bool):
+        self.ranked.fused_kernel = v
+
     # ------------------------------------------------------- worker export
     def worker_spec(self) -> dict:
         """Picklable kwargs reconstructing this config in a worker process.
@@ -236,5 +264,6 @@ class ServeConfig:
                 payload_bits=self.ranked.payload_bits,
                 topk_exhaustive_cutoff=self.ranked.topk_exhaustive_cutoff,
                 score_kernel=self.ranked.score_kernel,
+                fused_kernel=self.ranked.fused_kernel,
             ),
         }

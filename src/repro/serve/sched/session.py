@@ -202,6 +202,36 @@ class Session:
             if b >= self.sched_cfg.max_batch:
                 break
             b = min(2 * b, self.sched_cfg.max_batch)
+        if self.cfg.ranked.enabled and self.cfg.ranked.fused_kernel:
+            self._warm_fused(replicas, t)
+
+    def _warm_fused(self, replicas, t: int) -> None:
+        """Pre-trigger the fused ranked kernel's row buckets on every replica.
+
+        The fused dispatch jit-specializes on its padded (rows, terms,
+        candidates, window) bucket; driving the power-of-two row buckets with
+        a real term keeps that compilation out of the serving path, same as
+        the boolean warm above.  Best-effort: a store without payload
+        streams can't rank, so failures leave the replica cold, not broken.
+        """
+        # several dense terms at k=1: the threshold rises after the first
+        # essential decode, leaving the rest as a probe tail for the kernel
+        dfs = np.asarray(self.engine._global_dfs)
+        terms = tuple(int(x) for x in np.argsort(dfs)[-4:] if dfs[x] > 0) or (t,)
+        item = (terms, (), 1, 0)
+        b = 1
+        while True:
+            futs = [
+                self._fan.submit(r.call, ("topk", [item] * b)) for r in replicas
+            ]
+            try:
+                for f in futs:
+                    f.result()
+            except Exception:
+                return
+            if b >= self.sched_cfg.max_batch:
+                return
+            b = min(2 * b, self.sched_cfg.max_batch)
 
     @staticmethod
     def _bucket(n: int) -> int:

@@ -50,12 +50,15 @@ def execute_topk(shard, items: list) -> list:
     Applies the ranked run mask locally (skip when no term has local
     postings or a required term is absent — same rule as
     planner.ranked_run_mask), so the session can broadcast one item list to
-    every shard group.
+    every shard group.  Live items go through ``shard.query_topk_batch`` —
+    with ``ranked.fused_kernel`` that is one fused Pallas dispatch for the
+    whole batch, otherwise a loop over the multi-phase path.
     """
     empty = (np.zeros(0, np.int32), np.zeros(0, np.int64))
     ldfs = shard.local_dfs
-    out = []
-    for terms, required, k, floor in items:
+    out: list = [empty] * len(items)
+    idx, batch = [], []
+    for pos, (terms, required, k, floor) in enumerate(items):
         terms = tuple(int(t) for t in terms)
         required = tuple(int(t) for t in required)
         if (
@@ -64,10 +67,12 @@ def execute_topk(shard, items: list) -> list:
             or not any(int(ldfs[t]) for t in terms)
             or any(int(ldfs[t]) == 0 for t in required)
         ):
-            out.append(empty)
             continue
-        r = shard.query_topk_local(terms, int(k), required=required, floor=int(floor))
-        out.append((r.ids, r.scores))
+        idx.append(pos)
+        batch.append((terms, int(k), required, int(floor)))
+    if batch:
+        for pos, r in zip(idx, shard.query_topk_batch(batch)):
+            out[pos] = (r.ids, r.scores)
     return out
 
 

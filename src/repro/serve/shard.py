@@ -245,6 +245,8 @@ class ShardEngine:
         with ties ascending id.  ``floor`` is the facade's running k-th best
         score: only strictly better docs can matter here (later shards hold
         larger ids, so floor ties lose)."""
+        if self.cfg.ranked.fused_kernel:
+            return self.query_topk_batch([(tuple(terms), k, tuple(required), floor)])[0]
         src = self.ranked
         scorer = self._batch_scorer() if self.cfg.ranked.score_kernel else None
         with trace.span("shard.topk", shard=self.shard_id, k=int(k),
@@ -259,6 +261,39 @@ class ShardEngine:
             ids=(ans.ids.astype(np.int64) + self.lo).astype(np.int32),
             scores=ans.scores,
         )
+
+    def query_topk_batch(self, items) -> list[TopKResult]:
+        """Batched ranked entry point: [(terms, k, required, floor), ...] ->
+        one TopKResult per item, global doc ids.
+
+        With ``ranked.fused_kernel`` the whole batch's probe tail is answered
+        by a single ``kernel.fused_query`` dispatch (replacing the per-term
+        guided-probe / payload-unpack / score host bridge spans); otherwise
+        it loops the multi-phase ``query_topk_local``.  Both paths are
+        bit-identical by construction and asserted so in tests/benchmarks.
+        """
+        if not self.cfg.ranked.fused_kernel:
+            return [
+                self.query_topk_local(t, k, required=r, floor=f)
+                for (t, k, r, f) in items
+            ]
+        from repro.kernels.fused_query.ops import fused_topk_batch
+
+        src = self.ranked
+        with trace.span("shard.topk_batch", shard=self.shard_id,
+                        items=len(items)):
+            answers = fused_topk_batch(
+                src, items,
+                exhaustive_cutoff=self.cfg.ranked.topk_exhaustive_cutoff,
+                stats=self.ranked_stats,
+            )
+        return [
+            TopKResult(
+                ids=(a.ids.astype(np.int64) + self.lo).astype(np.int32),
+                scores=a.scores,
+            )
+            for a in answers
+        ]
 
     def _batch_scorer(self):
         from repro.kernels.bm25_score.ops import score_candidates
@@ -491,6 +526,25 @@ class _RankedSource:
         if found.any():
             q[found] = self._store.payload_at(t, rank[found]).astype(np.int64)
         return found, q
+
+    # ---- fused-kernel extensions (kernels.fused_query.ops) ----
+    @property
+    def payload_bits(self) -> int:
+        """Quantized-impact width — static per store, so per kernel dispatch."""
+        return int(self._store.payload_bits)
+
+    def payload_words(self, t: int) -> np.ndarray:
+        """Term t's packed payload stream (uint32 words, rank-aligned)."""
+        return self._store.payload_streams[t]
+
+    def postings(self, t: int) -> np.ndarray:
+        """Fully-decoded ids only (host rank fallback for classical codecs)."""
+        return self._sh._postings(t)
+
+    def term_model(self, t: int):
+        """Guided ε-window rank model, or None (classical codec/no guiding)."""
+        g = self._sh.guided
+        return g.term_model(t) if g is not None else None
 
     def seg_ub(self, t: int, cands: np.ndarray) -> np.ndarray:
         """Block-max bound per candidate: its bracketing segment's max impact

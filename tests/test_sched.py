@@ -446,6 +446,24 @@ def test_flat_kwargs_deprecated_but_land_in_subconfigs():
         ServeConfig(not_a_knob=1)
 
 
+def test_flat_kwarg_warning_cached_per_call_site():
+    """A hot loop re-building configs warns once per call site, not per call."""
+    from repro.serve import config as cfg_mod
+
+    cfg_mod._WARNED_SITES.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            ServeConfig(payload_bits=4)  # one site: exactly one warning
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    # a different call site with the same kwarg still gets its own warning
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ServeConfig(payload_bits=4)
+    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 1
+
+
 def test_flat_attributes_forward_to_subconfigs():
     cfg = ServeConfig()
     cfg.trace = sentinel = object()
