@@ -16,7 +16,9 @@ any regresses beyond the tolerance:
                                 bandwidth vs the HBM roof; gated as a floor —
                                 higher is better)
   BENCH_serve_latency.json      trace_overhead_ratio (traced vs untraced
-                                closed-loop service time, same run),
+                                closed-loop service time through the sched/
+                                process-replica path — TraceContext IPC,
+                                span shipping and collation included),
                                 latency_ratio (open-loop p99/p50 tail
                                 amplification under Poisson arrivals)
   BENCH_serve_sustained.json    qps_ratio (serial fan-out vs the continuous-

@@ -36,17 +36,18 @@ Emits BENCH_ranked_topk.json:
 Every fused result is asserted bit-identical to the multi-phase results and
 the brute-force oracle, for K=1 and K=4 sharding.  The fused pass also
 writes a Chrome-trace of one traced batch (kernel.fused_query spans) to
-ranked_topk.fused.trace.json for the CI artifact.
+artifacts/ranked_topk.fused.trace.json for the CI artifact.
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import numpy as np
 
 BENCH_PATH = "BENCH_ranked_topk.json"
-FUSED_TRACE_PATH = "ranked_topk.fused.trace.json"
+FUSED_TRACE_PATH = os.path.join("artifacts", "ranked_topk.fused.trace.json")
 
 N_DOCS = 4096
 N_TERMS = 5000
@@ -163,6 +164,7 @@ def ranked_rows(write_json: bool = True):
             eng_f.cfg.trace = tracer
             eng_f.query_topk(queries, TOP_K)
             eng_f.cfg.trace = None
+            os.makedirs(os.path.dirname(FUSED_TRACE_PATH), exist_ok=True)
             tracer.save(FUSED_TRACE_PATH)
 
     # the configuration the fused kernel replaces: multi-phase with its probe

@@ -163,6 +163,48 @@ def main():
           f"{sm['batches']} batches dispatched, {sm['shed']['deadline']} shed")
     assert not never.ok and never.reason == "deadline"
 
+    # 12. distributed tracing + SLO telemetry: the same ranked query through
+    # a real process replica.  The scheduler propagates a TraceContext over
+    # the worker pipe; the worker ships its span buffer back with the reply;
+    # the host collator aligns the two monotonic clocks (min-RTT ping
+    # offset) and merges everything onto ONE timeline — each worker is its
+    # own named pid lane next to the host's.  (`repro.launch.serve
+    # --replicas 1 --slo` drives the same path from the CLI.)
+    from repro.obs import nesting_violations, render_prometheus
+
+    dist_tracer = Tracer()
+    dist_cfg = ServeConfig(algorithm="block", verified=True, n_shards=2,
+                           sched=dict(n_replicas=1),
+                           obs=dict(trace=dist_tracer, probe_log=ProbeLog()))
+    dist_eng = BooleanEngine(lb, inv, li_cfg, dist_cfg)
+    with tempfile.TemporaryDirectory() as store_dir:
+        with Session(dist_eng, store_dir=store_dir) as session:
+            session.warm()  # spawn replicas + pre-compile outside the timing
+            rr = session.submit(QueryRequest(terms=ranked_q[0], mode="ranked",
+                                             k=10), timeout=60)
+            assert rr.ok and np.array_equal(rr.ids, top.ids)  # still bit-exact
+            a = rr.autopsy()
+            slo = session.slo_report()
+    lanes = sorted({s.pid for s in dist_tracer.spans})
+    worker_names = {s.name for s in dist_tracer.spans if s.pid != 0}
+    assert len(lanes) > 1, "worker spans must merge into the host timeline"
+    assert nesting_violations(dist_tracer.spans, slack_us=0.5) == []
+    print(f"distributed trace: {len(lanes)} pid lanes (host + "
+          f"{len(lanes) - 1} workers), worker phases "
+          f"{sorted(worker_names)[:4]}...")
+    print(f"autopsy: total {a['total_us'] / 1e3:.2f} ms = queue "
+          f"{a['queue_us'] / 1e3:.2f} + dispatch {a['dispatch_us'] / 1e3:.2f}"
+          f" + execute {a['execute_us'] / 1e3:.2f} + merge "
+          f"{a['merge_us'] / 1e3:.2f} ms ({a['execute_frac']:.0%} execute)")
+    ten = slo["tenants"]["default"]
+    print(f"slo window: {ten['requests']} request(s), hit rate "
+          f"{ten['deadline_hit_rate']:.0%}, p99 {ten['p99_ms']:.2f} ms, "
+          f"burn {ten['burn_rate']:.2f}x of target {slo['target']:.0%}")
+    prom = render_prometheus({"sched": slo["sched"]})
+    print("prometheus exposition (first 3 lines):")
+    for line in prom.splitlines()[:3]:
+        print(f"  {line}")
+
 
 if __name__ == "__main__":
     main()

@@ -22,14 +22,24 @@ facade's own shards, R>0 spawns R process replicas per shard over the
 persistent store; --deadline-ms bounds each request's queue wait (late
 requests come back as typed Rejected, never silently dropped).
 
+With --replicas and --trace-out together the trace is *distributed*: worker
+replicas ship their span buffers back with every response and the launcher
+exports one timeline where each process replica renders as its own named
+pid lane next to the host scheduler.  --slo prints the per-tenant rolling
+SLO report (deadline-hit-rate, p99, burn-rate), a per-request latency
+autopsy (queue/dispatch/execute/merge), and a Prometheus rendering of the
+scheduler metrics; --probe-log-max-bytes size-caps the probe JSONL sink.
+
   PYTHONPATH=src python -m repro.launch.serve --algorithm block --queries 64
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --index-dir /tmp/idx
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --topk 10 --fused
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --replicas 1 \\
-      --deadline-ms 100
+      --deadline-ms 100 --slo
+  PYTHONPATH=src python -m repro.launch.serve --shards 2 --replicas 1 \\
+      --trace-out serve.trace.json  # end-to-end distributed trace
   PYTHONPATH=src python -m repro.launch.serve --trace-out serve.trace.json \\
-      --probe-log probes.jsonl
+      --probe-log probes.jsonl --probe-log-max-bytes 1048576
 """
 from __future__ import annotations
 
@@ -107,7 +117,17 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="scheduler default deadline; requests queued past it "
                          "are shed with a typed Rejected")
+    ap.add_argument("--slo", action="store_true",
+                    help="print the scheduler's rolling SLO report (per-tenant "
+                         "deadline-hit-rate/p99/burn-rate), a per-request "
+                         "latency autopsy, and Prometheus-rendered metrics "
+                         "(implies --replicas 0 when --replicas is unset)")
+    ap.add_argument("--probe-log-max-bytes", type=int, default=None,
+                    help="rotate the probe log past this size (<path>.1 keeps "
+                         "the previous window; unset = unbounded)")
     args = ap.parse_args()
+    if args.slo and args.replicas is None:
+        args.replicas = 0  # the SLO report reads the scheduler's window
 
     corpus = synthesize_corpus(
         CorpusConfig(n_docs=args.docs, n_terms=args.terms, avg_doc_len=80)
@@ -119,10 +139,15 @@ def main():
     params = train_membership(corpus, inv, li_cfg, steps=args.train_steps)
     lb = fit_thresholds(params, inv)
     tracer = Tracer() if args.trace_out else None
-    probe_log = ProbeLog(args.probe_log) if args.probe_log else None
+    probe_log = (
+        ProbeLog(args.probe_log, max_bytes=args.probe_log_max_bytes)
+        if args.probe_log
+        else None
+    )
     cfg = ServeConfig(algorithm=args.algorithm, verified=not args.no_verify,
                       use_kernel=args.use_kernel, n_shards=args.shards,
-                      obs=dict(trace=tracer, probe_log=probe_log),
+                      obs=dict(trace=tracer, probe_log=probe_log,
+                               probe_log_max_bytes=args.probe_log_max_bytes),
                       ranked=dict(fused_kernel=args.fused,
                                   # the exhaustive shortcut would swallow every
                                   # demo-sized query before the fused dispatch
@@ -217,6 +242,36 @@ def main():
                 print(f"[serve] scheduler shed {len(shed)} request(s): "
                       f"{sorted({o.reason for o in shed})}")
             assert n_same == len(served), "Session.submit must match query_batch"
+            if served:
+                a = served[0].autopsy()
+                print(f"[serve] autopsy (first served): "
+                      f"total {a['total_us'] / 1e3:.2f} ms = "
+                      f"queue {a['queue_us'] / 1e3:.2f} + "
+                      f"dispatch {a['dispatch_us'] / 1e3:.2f} + "
+                      f"execute {a['execute_us'] / 1e3:.2f} + "
+                      f"merge {a['merge_us'] / 1e3:.2f} ms "
+                      f"(execute {a['execute_frac']:.0%} of total)")
+            if tracer is not None and args.replicas > 0:
+                lanes = sorted({s.pid for s in tracer.spans if s.pid != 0})
+                wspans = sum(1 for s in tracer.spans if s.pid != 0)
+                print(f"[serve] distributed trace: {wspans} worker spans "
+                      f"across {len(lanes)} replica lane(s) collated onto "
+                      f"the host timeline")
+            if args.slo:
+                from repro.obs import render_prometheus
+
+                rep = session.slo_report()
+                print(f"[serve] SLO report (window {rep['window_s']:.0f}s, "
+                      f"target {rep['target']:.0%}):")
+                for tenant, t in sorted(rep["tenants"].items()):
+                    print(f"[serve]   tenant {tenant!r}: {t['requests']} req "
+                          f"({t['shed']} shed), hit-rate "
+                          f"{t['deadline_hit_rate']:.1%}, p99 "
+                          f"{t['p99_ms']:.2f} ms, burn {t['burn_rate']:.2f}x")
+                prom = render_prometheus({"sched": rep["sched"]})
+                print(f"[serve] prometheus ({len(prom.splitlines())} lines):")
+                for line in prom.splitlines()[:6]:
+                    print(f"[serve]   {line}")
 
     lat = eng.metrics.snapshot().get("latency", {})
     for name in ("query_us", "topk_query_us"):

@@ -69,7 +69,15 @@ def default_latency_buckets() -> list[float]:
 
 
 class Histogram:
-    """Fixed-bucket histogram with interpolated percentile summaries."""
+    """Fixed-bucket histogram with interpolated percentile summaries.
+
+    Thread-safe: the sched loop's runner threads observe while the session
+    (or an SLO scrape) snapshots.  One lock covers observe/snapshot/reset so
+    a snapshot is a *consistent* view — count always equals the bucket sum,
+    and min/max always bracket the percentiles — instead of a torn read
+    mid-observe.  The lock is uncontended in the common case and cheaper
+    than the bisect it guards.
+    """
 
     def __init__(self, buckets: list[float] | None = None):
         edges = sorted(float(b) for b in (buckets or default_latency_buckets()))
@@ -81,19 +89,25 @@ class Histogram:
         self.sum = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self.counts[bisect_right(self.edges, v)] += 1
-        self.count += 1
-        self.sum += v
-        if v < self.min:
-            self.min = v
-        if v > self.max:
-            self.max = v
+        with self._lock:
+            self.counts[bisect_right(self.edges, v)] += 1
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
 
     def percentile(self, q: float) -> float:
         """Interpolated q-th percentile (0..100), exact within one bucket."""
+        with self._lock:
+            return self._percentile_locked(q)
+
+    def _percentile_locked(self, q: float) -> float:
         if self.count == 0:
             return 0.0
         if not 0.0 <= q <= 100.0:
@@ -115,25 +129,27 @@ class Histogram:
         return self.max
 
     def reset(self) -> None:
-        self.counts = [0] * (len(self.edges) + 1)
-        self.count = 0
-        self.sum = 0.0
-        self.min = float("inf")
-        self.max = float("-inf")
+        with self._lock:
+            self.counts = [0] * (len(self.edges) + 1)
+            self.count = 0
+            self.sum = 0.0
+            self.min = float("inf")
+            self.max = float("-inf")
 
     def snapshot(self) -> dict[str, float] | None:
-        if self.count == 0:
-            return None
-        return {
-            "count": self.count,
-            "sum": self.sum,
-            "mean": self.sum / self.count,
-            "min": self.min,
-            "max": self.max,
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
-        }
+        with self._lock:
+            if self.count == 0:
+                return None
+            return {
+                "count": self.count,
+                "sum": self.sum,
+                "mean": self.sum / self.count,
+                "min": self.min,
+                "max": self.max,
+                "p50": self._percentile_locked(50),
+                "p90": self._percentile_locked(90),
+                "p99": self._percentile_locked(99),
+            }
 
 
 class Registry:

@@ -19,6 +19,15 @@ Span timestamps are ``perf_counter_ns`` relative to the tracer's epoch,
 reported in microseconds (the Chrome trace unit).  Attributes are free-form
 key/values rendered into the event's ``args``; callers attach measured
 counters after entry via ``handle.set(bytes=...)``.
+
+Spans cross process boundaries: a worker runs its own ``Tracer``, ships
+finished spans as wire dicts (``drain_wire`` — absolute worker-clock
+nanoseconds, so no epoch needs to travel), and the host maps them onto its
+own timeline with the replica's estimated clock offset (obs/collate.py).
+``Span.pid`` keeps each process in its own Chrome-trace lane;
+``set_process_name`` labels the lanes.  The ``TraceContext`` carried with
+each IPC request tells the worker whether to trace at all, so the trace-off
+path still costs nothing on the wire.
 """
 from __future__ import annotations
 
@@ -38,6 +47,21 @@ class Span:
     tid: int
     depth: int  # nesting level inside its thread (0 = top-level)
     attrs: dict = field(default_factory=dict)
+    pid: int = 0  # 0 = the tracer's own process; workers keep their os pid
+
+
+@dataclass
+class TraceContext:
+    """Per-request observability contract carried through worker IPC.
+
+    Pickles with the request message; the worker reads it to decide what to
+    ship back (span buffer, probe records) and tags its spans with
+    ``trace_id`` so one request renders end-to-end across pid lanes.
+    """
+
+    trace_id: int = 0
+    trace: bool = False  # ship finished spans back with the response
+    probe: bool = False  # ship routed-probe records back with the response
 
 
 class _NullSpan:
@@ -147,6 +171,7 @@ class Tracer:
         self.spans: list[Span] = []
         self._lock = threading.Lock()
         self._local = threading.local()
+        self._process_names: dict[int, str] = {0: name}
 
     # ------------------------------------------------------------- record
     def _stack(self) -> list:
@@ -159,6 +184,17 @@ class Tracer:
         with self._lock:
             self.spans.append(s)
 
+    def add_span(self, s: Span) -> None:
+        """Append an externally constructed span (collated worker spans,
+        retroactive queue-wait spans) onto this tracer's timeline."""
+        with self._lock:
+            self.spans.append(s)
+
+    def set_process_name(self, pid: int, label: str) -> None:
+        """Label a pid lane in the exported trace (host lane 0 is prenamed)."""
+        with self._lock:
+            self._process_names[int(pid)] = label
+
     def span(self, name: str, **attrs) -> _SpanHandle:
         return _SpanHandle(self, name, attrs)
 
@@ -170,15 +206,44 @@ class Tracer:
             self.spans.clear()
         self.epoch_ns = time.perf_counter_ns()
 
+    # --------------------------------------------------------------- wire
+    def drain_wire(self) -> list[dict]:
+        """Pop finished spans as picklable wire dicts for IPC shipping.
+
+        Timestamps go out as *absolute* ``perf_counter_ns`` values
+        (``ts_ns = epoch_ns + ts_us*1e3``): the receiving host subtracts the
+        replica's estimated clock offset and re-bases onto its own epoch
+        (obs/collate.span_from_wire), so the epoch itself never travels.
+        The epoch is kept — a worker drains after every request without
+        restarting its clock.
+        """
+        with self._lock:
+            spans, self.spans = self.spans, []
+        return [
+            {
+                "name": s.name,
+                "ts_ns": int(self.epoch_ns + s.ts_us * 1e3),
+                "dur_us": s.dur_us,
+                "tid": s.tid,
+                "depth": s.depth,
+                "attrs": s.attrs,
+            }
+            for s in spans
+        ]
+
     # ------------------------------------------------------------- export
     def chrome_trace(self) -> dict:
         """The trace as a Chrome/Perfetto ``traceEvents`` document.
 
         Every span becomes one complete ("X") event; nesting is implied by
-        (tid, ts, dur) containment, which the viewers render as stacks.
+        (pid, tid, ts, dur) containment, which the viewers render as stacks.
+        Worker spans collated from process replicas keep their own pid, so
+        each replica renders as its own named process lane ("M" metadata
+        events carry the labels).
         """
         with self._lock:
             spans = list(self.spans)
+            names = dict(self._process_names)
         events = [
             {
                 "name": s.name,
@@ -186,16 +251,27 @@ class Tracer:
                 "ph": "X",
                 "ts": s.ts_us,
                 "dur": s.dur_us,
-                "pid": 0,
+                "pid": s.pid,
                 "tid": s.tid,
                 "args": dict(s.attrs),
             }
             for s in spans
         ]
+        n_spans = len(events)
+        events += [
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": pid,
+                "tid": 0,
+                "args": {"name": label},
+            }
+            for pid, label in sorted(names.items())
+        ]
         return {
             "traceEvents": events,
             "displayTimeUnit": "ms",
-            "otherData": {"tracer": self.name, "n_spans": len(events)},
+            "otherData": {"tracer": self.name, "n_spans": n_spans},
         }
 
     def save(self, path: str) -> None:

@@ -31,16 +31,27 @@ from typing import TYPE_CHECKING
 if TYPE_CHECKING:  # handles only; never imported at runtime from here
     from repro.obs.metrics import Registry
     from repro.obs.probelog import ProbeLog
+    from repro.obs.slo import SLOMonitor
     from repro.obs.trace import Tracer
 
 
 @dataclass
 class ObsConfig:
-    """Observability handles (all opt-in; None costs ~nothing)."""
+    """Observability handles (all opt-in; None costs ~nothing).
+
+    With a tracer and/or probe log installed, the scheduler forwards a
+    TraceContext to process replicas, which ship their span buffers and
+    probe records back with each response — the handles below then cover
+    the distributed path too, no extra plumbing.
+    """
 
     trace: "Tracer | None" = None  # span tracer, active for every served batch
     metrics: "Registry | None" = None  # facade registry (engine creates one if None)
     probe_log: "ProbeLog | None" = None  # per-(query, term, shard) probe JSONL
+    # rotate a file-backed probe log past this size (ProbeLog(max_bytes=));
+    # None = unbounded (launch/serve.py threads --probe-log-max-bytes here)
+    probe_log_max_bytes: int | None = None
+    slo: "SLOMonitor | None" = None  # per-tenant SLO window (Session makes one if None)
 
 
 @dataclass

@@ -84,10 +84,35 @@ class QueryResult:
     scores: np.ndarray | None = None
     queue_us: float = 0.0  # submit -> dispatch
     service_us: float = 0.0  # dispatch -> resolved (whole coalesced batch)
+    # service_us decomposed by the session: dispatch_us (row stacking +
+    # planning), execute_us (shard fan-out wall), merge_us (bitmap/heap
+    # fold) — None for short-circuited results that never saw a batch
+    phases: dict | None = None
 
     @property
     def ok(self) -> bool:
         return True
+
+    def autopsy(self) -> dict:
+        """Where this request's latency went: queue/dispatch/execute/merge.
+
+        Returns absolute microseconds plus each phase's fraction of the
+        total (``*_frac``).  Phases cover the whole coalesced batch the
+        request rode in — the scheduler amortizes, so a request's execute
+        time is its batch's execute time.
+        """
+        phases = {
+            "queue_us": self.queue_us,
+            "dispatch_us": 0.0,
+            "execute_us": 0.0,
+            "merge_us": 0.0,
+        }
+        phases.update(self.phases or {})
+        total = self.queue_us + self.service_us
+        out = {"total_us": total, "service_us": self.service_us, **phases}
+        for k, v in phases.items():
+            out[k.replace("_us", "_frac")] = v / total if total > 0 else 0.0
+        return out
 
 
 @dataclass

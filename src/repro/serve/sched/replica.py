@@ -19,12 +19,23 @@ partition.  Two replica kinds implement the same two-method surface
 surfacing a typed ``WorkerFailure``.  The session converts that into
 ``Rejected("worker_failed")`` results: a crash mid-batch is visible, typed,
 and bounded, never a hang or a silent drop.
+
+Observability rides the same seam.  After every ready handshake — first
+spawn or respawn — a ``ProcessReplica`` pings the worker's monotonic clock
+(obs/collate.estimate_clock_offset) so shipped span timestamps can be mapped
+onto the host timeline; replies carrying a third element (the worker's span
+buffer and probe records, see sched/worker.py) are ingested into the host
+tracer / probe sink right where the reply lands.  ``ReplicaGroup.call``
+re-activates the configured tracer around the dispatch because it often runs
+on a fan-pool thread that has no ambient tracer of its own.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import threading
 
+from repro.obs import trace
+from repro.obs.collate import estimate_clock_offset, ingest_worker_spans
 from repro.serve.sched.api import WorkerFailure
 from repro.serve.sched.worker import execute_bool, execute_topk, worker_main
 
@@ -61,12 +72,31 @@ class InlineReplica:
 
 
 class ProcessReplica:
-    """A worker process serving one shard; lazily spawned, auto-respawned."""
+    """A worker process serving one shard; lazily spawned, auto-respawned.
 
-    def __init__(self, spec: dict, *, spawn_timeout_s: float = 120.0):
+    ``obs`` (an ObsConfig) is where shipped worker telemetry lands: spans
+    into ``obs.trace`` (time-aligned via the per-spawn clock sync), probe
+    records into ``obs.probe_log``.  ``label`` names the replica's process
+    lane in the exported trace.
+    """
+
+    def __init__(
+        self,
+        spec: dict,
+        *,
+        spawn_timeout_s: float = 120.0,
+        obs=None,
+        label: str | None = None,
+    ):
         self.spec = spec
         self.spawn_timeout_s = spawn_timeout_s
+        self.obs = obs
+        self.label = label or f"shard{spec['shard_idx']}-worker"
         self.inflight = 0
+        self.pid: int | None = None
+        self.clock_offset_ns: int | None = None  # worker clock - host clock
+        self.clock_rtt_ns: int | None = None
+        self.clock_syncs = 0  # one per (re)spawn; tests assert the re-sync
         self._lock = threading.Lock()  # pipe is strict request/response
         self._proc = None
         self._conn = None
@@ -95,6 +125,25 @@ class ProcessReplica:
             proc.terminate()
             raise ReplicaError(f"worker failed to build its engine: {payload}")
         self._proc, self._conn = proc, parent
+        self.pid = int(payload["pid"])
+        self._sync_clock_locked()
+
+    def _sync_clock_locked(self) -> None:
+        """Estimate this worker's monotonic-clock offset (min-RTT pings).
+
+        Runs after every ready handshake, so a respawned replica — a fresh
+        process with a fresh clock origin — re-syncs before it serves.
+        """
+
+        def roundtrip() -> int:
+            self._conn.send(("clock",))
+            tag, t_worker = self._conn.recv()
+            if tag != "ok":
+                raise ReplicaError(f"clock sync failed: {t_worker}")
+            return int(t_worker)
+
+        self.clock_offset_ns, self.clock_rtt_ns = estimate_clock_offset(roundtrip)
+        self.clock_syncs += 1
 
     def _fail_locked(self) -> None:
         if self._conn is not None:
@@ -113,13 +162,34 @@ class ProcessReplica:
                 self._start_locked()
             try:
                 self._conn.send(msg)
-                tag, payload = self._conn.recv()
+                reply = self._conn.recv()
             except (EOFError, BrokenPipeError, ConnectionResetError, OSError) as e:
                 self._fail_locked()
                 raise ReplicaError(f"worker connection lost: {e!r}") from e
+            tag, payload = reply[0], reply[1]
             if tag == "err":  # handler error; the worker itself is still up
                 raise ReplicaError(payload)
+            if len(reply) > 2 and reply[2]:
+                self._ingest(reply[2])
             return payload
+
+    def _ingest(self, wire: dict) -> None:
+        """Land a reply's shipped telemetry on the host obs handles."""
+        obs = self.obs
+        if obs is None:
+            return
+        spans = wire.get("spans")
+        if spans and obs.trace is not None and self.clock_offset_ns is not None:
+            ingest_worker_spans(
+                obs.trace,
+                spans,
+                offset_ns=self.clock_offset_ns,
+                pid=self.pid,
+                label=self.label,
+            )
+        probes = wire.get("probes")
+        if probes and obs.probe_log is not None:
+            obs.probe_log.ingest(probes)
 
     def close(self) -> None:
         with self._lock:
@@ -144,6 +214,7 @@ class ReplicaGroup:
         n_docs: int = 0,
         retries: int = 1,
         metrics=None,
+        obs=None,
     ):
         if not replicas:
             raise ValueError(f"shard {shard_id}: a replica group needs >= 1 replica")
@@ -152,12 +223,20 @@ class ReplicaGroup:
         self.lo = lo  # global doc-id offset (the session's bitmap merge)
         self.n_docs = n_docs
         self.retries = retries
+        self.obs = obs  # tracer re-activation on fan-pool threads
         self._retried = metrics.counter("sched.worker_retries") if metrics else None
         self._failed = metrics.counter("sched.worker_failures") if metrics else None
 
     def call(self, msg):
         """Dispatch to the least-loaded replica; retry once (per config) on
-        failure, preferring a sibling replica; then raise WorkerFailure."""
+        failure, preferring a sibling replica; then raise WorkerFailure.
+
+        Re-activates the session's tracer for the dispatch: multi-shard
+        fan-out runs these calls on pool threads with no ambient tracer, and
+        inline replicas record their spans through it (process replicas ship
+        theirs back instead).
+        """
+        tracer = self.obs.trace if self.obs is not None else None
         last: Exception | None = None
         failed = None
         for attempt in range(self.retries + 1):
@@ -166,7 +245,8 @@ class ReplicaGroup:
             )
             replica.inflight += 1
             try:
-                return replica.call(msg)
+                with trace.activate(tracer):
+                    return replica.call(msg)
             except ReplicaError as e:
                 last = e
                 failed = replica

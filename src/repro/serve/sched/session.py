@@ -29,11 +29,20 @@ bit-identical to the legacy ``query_*`` entry points, which survive here as
 thin wrappers over ``submit``.
 
 Every decision is observable: ``sched.*`` counters/histograms land in the
-engine's metrics registry and enqueue/batch/dispatch/merge spans ride the
-engine's tracer (repro.obs), so BENCH artifacts explain themselves.
+engine's metrics registry and enqueue/queue-wait/batch/dispatch/merge spans
+ride the engine's tracer (repro.obs), so BENCH artifacts explain themselves.
+With process replicas the trace is *distributed*: a TraceContext travels
+with each fan-out, workers ship their span buffers and probe records back
+with the response, and replicas collate them onto the host timeline in
+their own pid lanes (obs/collate.py) — one request renders end-to-end from
+admission wait to worker probe/decode/kernel to merge.  Per-request
+``QueryResult.autopsy()`` decomposes latency into queue/dispatch/execute/
+merge, and ``slo_report()`` summarizes per-tenant deadline-hit-rate, p99
+and burn-rate over a rolling window (obs/slo.py).
 """
 from __future__ import annotations
 
+import itertools
 import os
 import threading
 import time
@@ -42,6 +51,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import numpy as np
 
 from repro.obs import trace
+from repro.obs.slo import SLOMonitor
+from repro.obs.trace import Span, TraceContext
 from repro.rank.score import TopKResult, select_topk
 from repro.serve.sched.admission import AdmissionQueue, Pending
 from repro.serve.sched.api import (
@@ -97,6 +108,11 @@ class Session:
         self._batch_size = self.metrics.histogram("sched.batch_size")
         self._queue_us = self.metrics.histogram("sched.queue_us")
         self._service_us = self.metrics.histogram("sched.service_us")
+        self._dispatch_us = self.metrics.histogram("sched.dispatch_us")
+        self._execute_us = self.metrics.histogram("sched.execute_us")
+        self._merge_us = self.metrics.histogram("sched.merge_us")
+        self.slo = self.cfg.obs.slo if self.cfg.obs.slo is not None else SLOMonitor()
+        self._trace_seq = itertools.count(1)  # trace ids for worker IPC
         self._groups = (
             replica_groups
             if replica_groups is not None
@@ -130,6 +146,7 @@ class Session:
                     n_docs=sh.n_docs,
                     retries=sc.worker_retries,
                     metrics=self.metrics,
+                    obs=eng.cfg.obs,
                 )
                 for sh in eng.shards
             ]
@@ -166,13 +183,19 @@ class Session:
                 ReplicaGroup(
                     idx,
                     [
-                        ProcessReplica(spec, spawn_timeout_s=sc.spawn_timeout_s)
-                        for _ in range(sc.n_replicas)
+                        ProcessReplica(
+                            spec,
+                            spawn_timeout_s=sc.spawn_timeout_s,
+                            obs=eng.cfg.obs,
+                            label=f"shard{idx}/replica{j}",
+                        )
+                        for j in range(sc.n_replicas)
                     ],
                     lo=lo,
                     n_docs=hi - lo,
                     retries=sc.worker_retries,
                     metrics=self.metrics,
+                    obs=eng.cfg.obs,
                 )
             )
         return groups
@@ -251,7 +274,9 @@ class Session:
         execution — that is the future's job.
         """
         fut: Future = Future()
+        t_submit = time.monotonic()
         if self._closed:
+            self._slo_track(fut, req.tenant, t_submit, None)
             fut.set_result(Rejected(reason=REJECT_SHUTDOWN, tenant=req.tenant))
             return fut
         row = req.terms
@@ -263,9 +288,9 @@ class Session:
         # like the engine facade's empty-batch path
         if (row < 0).all() or (req.mode == MODE_RANKED and req.k <= 0):
             self._short_circuit.inc()
+            self._slo_track(fut, req.tenant, t_submit, None)
             fut.set_result(self._empty_result(req))
             return fut
-        now = time.monotonic()
         deadline_ms = (
             req.deadline_ms
             if req.deadline_ms is not None
@@ -275,14 +300,37 @@ class Session:
             req=req,
             future=fut,
             row=row,
-            t_submit=now,
-            deadline=now + deadline_ms / 1e3 if deadline_ms is not None else None,
+            t_submit=t_submit,
+            deadline=(
+                t_submit + deadline_ms / 1e3 if deadline_ms is not None else None
+            ),
         )
+        self._slo_track(fut, req.tenant, t_submit, pending.deadline)
         with trace.activate(self.cfg.obs.trace), trace.span(
             "sched.enqueue", mode=req.mode, tenant=req.tenant, priority=req.priority
         ):
             self._queue.offer(pending, block=block)
         return fut
+
+    def _slo_track(
+        self, fut: Future, tenant: str, t_submit: float, deadline: float | None
+    ) -> None:
+        """Feed the SLO window when the future resolves — served or shed,
+        every admitted outcome is one sample (shed never meets a deadline)."""
+
+        def cb(f: Future) -> None:
+            r = f.result()  # resolved by contract before callbacks fire
+            now = time.monotonic()
+            served = bool(r.ok)
+            met = served and (deadline is None or now <= deadline)
+            self.slo.record(
+                tenant,
+                latency_us=1e6 * (now - t_submit),
+                served=served,
+                deadline_met=met,
+            )
+
+        fut.add_done_callback(cb)
 
     def submit(self, req: QueryRequest, *, timeout: float | None = None):
         """Synchronous submit: block until served or shed."""
@@ -313,6 +361,7 @@ class Session:
         mode = batch[0].req.mode
         for p in batch:
             self._queue_us.observe(1e6 * (t0 - p.t_submit))
+        self._queue_wait_spans(batch, t0)
         self._batches.inc()
         self._batch_size.observe(len(batch))
         self._dispatched.inc(len(batch))
@@ -334,6 +383,31 @@ class Session:
             self._service_us.observe(1e6 * (time.monotonic() - t0))
             self._slots.release()
 
+    def _queue_wait_spans(self, batch: list[Pending], t0: float) -> None:
+        """Retroactive admission-wait spans: submit -> dispatch per request.
+
+        ``time.monotonic`` and ``perf_counter`` share CLOCK_MONOTONIC on
+        Linux, so the wait interval maps onto the tracer's timeline exactly;
+        recorded at dispatch because only then is the wait's end known.
+        """
+        tracer = self.cfg.obs.trace
+        if tracer is None:
+            return
+        now_us = (time.perf_counter_ns() - tracer.epoch_ns) / 1e3
+        tid = threading.get_ident()
+        for p in batch:
+            dur_us = 1e6 * (t0 - p.t_submit)
+            tracer.add_span(
+                Span(
+                    name="sched.queue_wait",
+                    ts_us=now_us - dur_us,
+                    dur_us=dur_us,
+                    tid=tid,
+                    depth=0,
+                    attrs={"tenant": p.req.tenant, "mode": p.req.mode},
+                )
+            )
+
     def _stack_rows(self, batch: list[Pending], pad_rows: bool = False) -> np.ndarray:
         width = max(len(p.row) for p in batch)
         rows = self._bucket(len(batch)) if pad_rows else len(batch)
@@ -343,31 +417,68 @@ class Session:
         return q
 
     def _fan_out(self, msg) -> list:
-        """One message to every shard group, in parallel when it pays."""
+        """One message to every shard group, in parallel when it pays.
+
+        Appends a ``TraceContext`` telling workers what telemetry to ship
+        back (None when nothing is listening, so the trace-off wire cost
+        stays zero); inline replicas ignore the extra element.
+        """
+        obs = self.cfg.obs
+        ctx = None
+        if obs.trace is not None or obs.probe_log is not None:
+            ctx = TraceContext(
+                trace_id=next(self._trace_seq),
+                trace=obs.trace is not None,
+                probe=obs.probe_log is not None,
+            )
+        msg = msg + (ctx,)
         if len(self._groups) == 1:
             return [self._groups[0].call(msg)]
         futs = [self._fan.submit(g.call, msg) for g in self._groups]
         return [f.result() for f in futs]  # re-raises WorkerFailure
 
-    def _timing(self, p: Pending, t0: float) -> dict:
+    def _timing(self, p: Pending, t0: float, phases: dict | None = None) -> dict:
         return {
             "queue_us": 1e6 * (t0 - p.t_submit),
             "service_us": 1e6 * (time.monotonic() - t0),
+            "phases": dict(phases) if phases else None,
         }
+
+    def _phase_marks(self, t0: float, t_x0: float, t_x1: float) -> dict:
+        """The batch's service decomposition (one dict shared per batch):
+        dispatch = stack/plan before the fan-out, execute = fan-out wall,
+        merge = everything after (fold + resolve).  Feeds QueryResult.autopsy
+        and the sched.dispatch_us/execute_us/merge_us histograms."""
+        t_m = time.monotonic()
+        phases = {
+            "dispatch_us": 1e6 * (t_x0 - t0),
+            "execute_us": 1e6 * (t_x1 - t_x0),
+            "merge_us": 1e6 * (t_m - t_x1),
+        }
+        self._dispatch_us.observe(phases["dispatch_us"])
+        self._execute_us.observe(phases["execute_us"])
+        self._merge_us.observe(phases["merge_us"])
+        return phases
 
     def _run_boolean(self, batch: list[Pending], t0: float) -> None:
         q = self._stack_rows(batch, pad_rows=True)  # bucketed probe shape
+        t_x0 = time.monotonic()
         with trace.span("sched.dispatch", shards=len(self._groups), size=len(batch)):
             parts = self._fan_out(("bool", q))
+        t_x1 = time.monotonic()
         words = (self.n_docs + WORD_BITS - 1) // WORD_BITS
         merged = np.zeros((len(batch), words), dtype=np.uint32)
         with trace.span("sched.merge"):
             for g, bm in zip(self._groups, parts):
                 off = g.lo // WORD_BITS
                 merged[:, off : off + bm.shape[1]] = bm[: len(batch)]
+        phases = self._phase_marks(t0, t_x0, t_x1)
         for j, p in enumerate(batch):
             p.resolve(
-                QueryResult(ids=unpack_row(merged[j], self.n_docs), **self._timing(p, t0))
+                QueryResult(
+                    ids=unpack_row(merged[j], self.n_docs),
+                    **self._timing(p, t0, phases),
+                )
             )
 
     def _run_ranked(self, batch: list[Pending], t0: float) -> None:
@@ -396,17 +507,25 @@ class Session:
             idxmap.append(j)
         if not items:
             return
+        t_x0 = time.monotonic()
         with trace.span("sched.dispatch", shards=len(self._groups), size=len(items)):
             parts = self._fan_out(("topk", items))
+        t_x1 = time.monotonic()
         with trace.span("sched.merge"):
+            tops = []
             for n, j in enumerate(idxmap):
                 p = batch[j]
                 ids = np.concatenate([part[n][0] for part in parts])
                 scores = np.concatenate([part[n][1] for part in parts])
-                top = select_topk(ids, scores, int(p.req.k))
-                p.resolve(
-                    QueryResult(ids=top.ids, scores=top.scores, **self._timing(p, t0))
+                tops.append(select_topk(ids, scores, int(p.req.k)))
+        phases = self._phase_marks(t0, t_x0, t_x1)
+        for top, j in zip(tops, idxmap):
+            p = batch[j]
+            p.resolve(
+                QueryResult(
+                    ids=top.ids, scores=top.scores, **self._timing(p, t0, phases)
                 )
+            )
 
     # ----------------------------------------------------- legacy wrappers
     def query_batch(self, queries: np.ndarray) -> list[np.ndarray]:
@@ -476,6 +595,28 @@ class Session:
         if not r.ok:
             raise RuntimeError(f"request shed: {r.reason} ({r.detail})")
         return r
+
+    # ------------------------------------------------------------------ slo
+    def slo_report(self) -> dict:
+        """Rolling SLO view: per-tenant deadline-hit-rate / p99 / burn-rate
+        (obs/slo.py sliding window) paired with the whole-process ``sched.*``
+        latency histograms from the metrics registry."""
+        sched = self.metrics.snapshot().get("sched", {})
+        keep = (
+            "queue_us",
+            "service_us",
+            "dispatch_us",
+            "execute_us",
+            "merge_us",
+            "batch_size",
+            "shed",
+        )
+        return {
+            "window_s": self.slo.window_s,
+            "target": self.slo.target,
+            "tenants": self.slo.report(),
+            "sched": {k: sched[k] for k in keep if k in sched},
+        }
 
     # ---------------------------------------------------------------- exit
     def close(self) -> None:

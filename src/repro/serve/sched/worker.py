@@ -10,15 +10,25 @@ them re-encode anything (engines reload ~28x faster than re-encoding).
 
 Protocol (request/response over one ``multiprocessing.Pipe``):
 
-  ("ready", shard_idx)            worker -> parent once the engine is built
-  ("bool", q)                     (B, T) padded int32 -> ("ok", packed bitmap)
-  ("topk", [(terms, required, k, floor), ...])
+  ("ready", {"shard": i, "pid": p}) worker -> parent once the engine is built
+  ("bool", q[, ctx])              (B, T) padded int32 -> ("ok", packed bitmap)
+  ("topk", [(terms, required, k, floor), ...][, ctx])
                                   -> ("ok", [(ids, scores), ...]) global ids
   ("ping",)                       -> ("ok", "pong") — forces spawn/warm
+  ("clock",)                      -> ("ok", perf_counter_ns) — offset sync
   ("stats",)                      -> ("ok", shard metrics snapshot)
   ("crash",)                      hard-exits the process (crash-path tests)
   ("stop",)                       clean shutdown
   ("err", traceback_str)          any handler failure (worker stays alive)
+
+``ctx`` is an optional ``repro.obs.TraceContext``: when present the reply
+grows a third element, ``("ok", payload, {"spans": [...], "probes": [...]})``
+— the worker's span buffer (drained per request, absolute worker-clock
+nanoseconds) and its routed-probe records, which the host replica maps onto
+its own timeline / probe sink (obs/collate.py).  The worker runs its own
+``Tracer`` and an in-memory ``ProbeLog`` either way; with no ctx (or
+``ctx.trace`` false) nothing extra is recorded or shipped, keeping the
+trace-off wire cost at zero.
 
 Workers plan locally: each carries the *global* document frequencies, so
 ``plan_batch`` on a worker reproduces the facade plan for its shard exactly
@@ -31,9 +41,12 @@ the inline (0-replica) scheduler path runs the very same code.
 from __future__ import annotations
 
 import os
+import time
 import traceback
 
 import numpy as np
+
+from repro.obs import trace
 
 
 def execute_bool(shard, q: np.ndarray, global_dfs: np.ndarray, verified: bool) -> np.ndarray:
@@ -103,10 +116,19 @@ def _build_shard(spec: dict):
 
 def worker_main(conn, spec: dict) -> None:
     """Entry point of a spawned process replica (see module docstring)."""
+    from repro.obs.probelog import ProbeLog
+    from repro.obs.trace import Tracer
+
     try:
         shard, cfg = _build_shard(spec)
+        # in-memory probe sink, installed before the engine's first probe
+        # (GuidedPostings captures the handle lazily); drained per request
+        # and shipped back when the ctx asks, discarded otherwise
+        plog = ProbeLog()
+        cfg.obs.probe_log = plog
+        wtracer = Tracer(name=f"shard-worker-{spec['shard_idx']}")
         global_dfs = np.asarray(spec["global_dfs"])
-        conn.send(("ready", int(spec["shard_idx"])))
+        conn.send(("ready", {"shard": int(spec["shard_idx"]), "pid": os.getpid()}))
     except Exception:
         try:
             conn.send(("err", traceback.format_exc()))
@@ -125,10 +147,26 @@ def worker_main(conn, spec: dict) -> None:
         try:
             if op == "ping":
                 conn.send(("ok", "pong"))
-            elif op == "bool":
-                conn.send(("ok", execute_bool(shard, msg[1], global_dfs, cfg.verified)))
-            elif op == "topk":
-                conn.send(("ok", execute_topk(shard, msg[1])))
+            elif op == "clock":
+                conn.send(("ok", time.perf_counter_ns()))
+            elif op in ("bool", "topk"):
+                ctx = msg[2] if len(msg) > 2 else None
+                traced = ctx is not None and ctx.trace
+                with trace.activate(wtracer if traced else None), trace.span(
+                    f"worker.{op}", trace_id=getattr(ctx, "trace_id", 0)
+                ), plog.context(query=None, shard=shard.shard_id):
+                    if op == "bool":
+                        payload = execute_bool(shard, msg[1], global_dfs, cfg.verified)
+                    else:
+                        payload = execute_topk(shard, msg[1])
+                probes = plog.drain()  # drain always: bound worker memory
+                if ctx is None:
+                    conn.send(("ok", payload))
+                else:
+                    wire = {"spans": wtracer.drain_wire() if traced else []}
+                    if ctx.probe:
+                        wire["probes"] = probes
+                    conn.send(("ok", payload, wire))
             elif op == "stats":
                 conn.send(("ok", shard.metrics.snapshot()))
             else:

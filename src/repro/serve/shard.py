@@ -272,16 +272,25 @@ class ShardEngine:
         it loops the multi-phase ``query_topk_local``.  Both paths are
         bit-identical by construction and asserted so in tests/benchmarks.
         """
+        # shard-attribute any probe records from in here (query inherited:
+        # the facade sets it per query outside, workers leave it batch-wide)
+        log = getattr(self.cfg, "probe_log", None)
+        ctx = (
+            log.context(query=None, shard=self.shard_id)
+            if log is not None
+            else NULL_SPAN
+        )
         if not self.cfg.ranked.fused_kernel:
-            return [
-                self.query_topk_local(t, k, required=r, floor=f)
-                for (t, k, r, f) in items
-            ]
+            with ctx:
+                return [
+                    self.query_topk_local(t, k, required=r, floor=f)
+                    for (t, k, r, f) in items
+                ]
         from repro.kernels.fused_query.ops import fused_topk_batch
 
         src = self.ranked
-        with trace.span("shard.topk_batch", shard=self.shard_id,
-                        items=len(items)):
+        with ctx, trace.span("shard.topk_batch", shard=self.shard_id,
+                             items=len(items)):
             answers = fused_topk_batch(
                 src, items,
                 exhaustive_cutoff=self.cfg.ranked.topk_exhaustive_cutoff,
@@ -346,7 +355,12 @@ class ShardEngine:
         if self.n_docs == 0 or (run is not None and not run.any()):
             return out
         if mask is None:
-            mask = self.candidate_mask(q)
+            # worker path (no facade precompute): span the jit probe so a
+            # replica's shipped trace shows model time vs verify time
+            with trace.span(
+                "shard.candidate_mask", shard=self.shard_id, queries=n_queries
+            ):
+                mask = self.candidate_mask(q)
         log = getattr(self.cfg, "probe_log", None)
         for i in range(n_queries):
             if run is not None and not run[i]:

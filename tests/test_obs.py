@@ -56,10 +56,16 @@ def test_chrome_trace_schema():
     doc = tr.chrome_trace()
     assert doc["displayTimeUnit"] == "ms"
     assert doc["otherData"]["n_spans"] == 2
-    for ev in doc["traceEvents"]:
+    spans = [ev for ev in doc["traceEvents"] if ev["ph"] == "X"]
+    meta = [ev for ev in doc["traceEvents"] if ev["ph"] == "M"]
+    assert len(spans) == 2
+    for ev in spans:
         assert set(ev) == {"name", "cat", "ph", "ts", "dur", "pid", "tid", "args"}
-        assert ev["ph"] == "X" and ev["cat"] == "serve"
+        assert ev["cat"] == "serve"
         assert ev["dur"] >= 0.0
+    # the host lane is prenamed after the tracer
+    assert {"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+            "args": {"name": tr.name}} in meta
     json.dumps(doc)  # must be valid JSON end to end
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "t.trace.json")

@@ -1,0 +1,415 @@
+"""Distributed tracing + SLO telemetry (obs v2: collate/slo/export).
+
+The unit half pins the new primitives in isolation: min-RTT clock-offset
+estimation against a skewed fake clock, wire-span rebasing onto the host
+epoch, the per-lane nesting invariant checker, the sliding-window SLO
+monitor's hit-rate/burn-rate math, Prometheus text rendering, probe-log
+size-capped rotation and drain/ingest forwarding, and the histogram
+snapshot/reset race under writer threads.
+
+The integration half runs real process replicas: worker spans must merge
+into the host tracer time-aligned (own pid lanes, no partial overlaps,
+trace_id threaded through), worker probe records must land in the host
+sink, a crashed-then-respawned replica must re-sync its clock offset, and
+``QueryResult.autopsy()`` / ``Session.slo_report()`` must decompose where
+the latency went.
+"""
+import json
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.config import CorpusConfig, LearnedIndexConfig
+from repro.core import fit_thresholds, init_membership
+from repro.data.corpus import synthesize_corpus
+from repro.data.queries import sample_queries, zipf_conjunctions
+from repro.index.build import build_inverted_index
+from repro.obs import (
+    Histogram,
+    ProbeLog,
+    SLOMonitor,
+    TraceContext,
+    Tracer,
+    estimate_clock_offset,
+    ingest_worker_spans,
+    nesting_violations,
+    render_prometheus,
+    write_prometheus,
+)
+from repro.obs.trace import Span
+from repro.serve import BooleanEngine, QueryRequest, Rejected, ServeConfig, Session
+from repro.serve.sched import MODE_RANKED, WorkerFailure
+
+
+# ------------------------------------------------------------- clock offset
+def test_clock_offset_recovers_known_skew():
+    skew_ns = 5_000_000_000  # 5 s: far above any measurement error
+
+    def roundtrip():
+        return time.perf_counter_ns() + skew_ns
+
+    offset, rtt = estimate_clock_offset(roundtrip)
+    assert rtt >= 0
+    # symmetric-delay bound: the estimate is within RTT/2 of the true skew
+    assert abs(offset - skew_ns) <= rtt / 2 + 1_000
+
+    with pytest.raises(ValueError):
+        estimate_clock_offset(roundtrip, n=0)
+
+
+def test_clock_offset_keeps_min_rtt_sample():
+    # one fast exchange among slow ones: its (accurate) offset must win
+    calls = {"n": 0}
+
+    def roundtrip():
+        calls["n"] += 1
+        if calls["n"] != 3:
+            time.sleep(0.005)  # slow ping: midpoint assumption is off
+            return time.perf_counter_ns() + 10_000_000
+        return time.perf_counter_ns() + 10_000_000
+
+    offset, rtt = estimate_clock_offset(roundtrip, n=5)
+    assert calls["n"] == 5
+    assert rtt < 5_000_000  # the fast sample's RTT, not a slept one's
+    assert abs(offset - 10_000_000) <= rtt / 2 + 1_000
+
+
+# --------------------------------------------------------------- wire spans
+def test_wire_span_round_trip_rebases_onto_host_epoch():
+    host, worker = Tracer(name="host"), Tracer(name="w")
+    with worker.activate(), worker.span("worker.op", trace_id=7):
+        time.sleep(0.001)
+    [orig] = worker.spans
+    wire = worker.drain_wire()
+    assert worker.spans == []  # drained, epoch kept
+    assert wire[0]["name"] == "worker.op" and wire[0]["attrs"] == {"trace_id": 7}
+
+    # both tracers run on this process's clock, so the true offset is 0
+    n = ingest_worker_spans(host, wire, offset_ns=0, pid=4242, label="replica")
+    assert n == 1
+    [merged] = host.spans
+    assert merged.pid == 4242 and merged.name == "worker.op"
+    # rebasing: worker-epoch-relative ts shifted by the epoch gap
+    want_ts = (worker.epoch_ns - host.epoch_ns) / 1e3 + orig.ts_us
+    assert abs(merged.ts_us - want_ts) < 0.5
+    assert abs(merged.dur_us - orig.dur_us) < 1e-9
+
+    doc = host.chrome_trace()
+    lanes = {e["pid"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert lanes == {4242}
+    assert {"name": "process_name", "ph": "M", "pid": 4242, "tid": 0,
+            "args": {"name": "replica"}} in doc["traceEvents"]
+
+
+def _span(name, ts, dur, *, pid=0, tid=0):
+    return Span(name=name, ts_us=ts, dur_us=dur, tid=tid, depth=0, attrs={},
+                pid=pid)
+
+
+def test_nesting_violations_flags_partial_overlap_only():
+    nested = [_span("a", 0, 100), _span("b", 10, 50), _span("c", 20, 10)]
+    disjoint = [_span("d", 200, 50), _span("e", 300, 50)]
+    assert nesting_violations(nested + disjoint) == []
+    # partial overlap: starts inside `b`, ends beyond it (reported against
+    # the innermost still-open span)
+    bad = nesting_violations(nested + [_span("x", 50, 100)])
+    assert len(bad) == 1 and "'x'" in bad[0] and "'b'" in bad[0]
+    # the same intervals on different lanes never interact
+    assert nesting_violations(nested + [_span("x", 50, 100, pid=9)]) == []
+    assert nesting_violations(nested + [_span("x", 50, 100, tid=9)]) == []
+    # sub-slack overhang is tolerated (shared endpoints from float math)
+    assert nesting_violations(
+        [_span("a", 0, 100), _span("b", 50, 50.3)], slack_us=0.5
+    ) == []
+
+
+# ----------------------------------------------------------------- monitor
+def test_slo_monitor_hit_rate_percentiles_and_burn():
+    t = {"now": 0.0}
+    slo = SLOMonitor(window_s=10.0, target=0.9, clock=lambda: t["now"])
+    for i in range(8):
+        slo.record("a", latency_us=1000.0 * (i + 1), served=True,
+                   deadline_met=True)
+    slo.record("a", latency_us=50_000.0, served=True, deadline_met=False)
+    slo.record("a", latency_us=0.0, served=False, deadline_met=False)  # shed
+    rep = slo.report()["a"]
+    assert rep["requests"] == 10 and rep["served"] == 9 and rep["shed"] == 1
+    assert rep["deadline_hit_rate"] == pytest.approx(0.8)
+    # 20% misses against a 10% budget: burning at 2x sustainable
+    assert rep["burn_rate"] == pytest.approx(2.0)
+    lat_ms = sorted([1, 2, 3, 4, 5, 6, 7, 8, 50])
+    assert rep["p50_ms"] == pytest.approx(float(np.percentile(lat_ms, 50)))
+    assert rep["p99_ms"] == pytest.approx(float(np.percentile(lat_ms, 99)))
+
+    # the window slides: everything above ages out
+    t["now"] = 11.0
+    slo.record("b", latency_us=500.0, served=True, deadline_met=True)
+    rep = slo.report()
+    assert "a" not in rep and rep["b"]["requests"] == 1
+
+    slo.reset()
+    assert slo.report() == {}
+    with pytest.raises(ValueError):
+        SLOMonitor(target=1.0)
+
+
+def test_slo_monitor_bounds_memory_per_tenant():
+    slo = SLOMonitor(window_s=1e9, max_samples_per_tenant=16)
+    for _ in range(100):
+        slo.record("hot", latency_us=1.0, served=True, deadline_met=True)
+    assert slo.report()["hot"]["requests"] == 16
+
+
+# ---------------------------------------------------------------- exporter
+def test_render_prometheus_text_exposition():
+    h = Histogram()
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    text = render_prometheus({
+        "sched": {"shed": {"deadline": 2}, "service_us": h.snapshot()},
+        "queries": {"boolean": 7},
+        "sweep": {"p99": [1.5, 2.5]},
+        "meta": {"note": "strings are skipped", "none": None},
+    })
+    lines = text.splitlines()
+    assert "repro_queries_boolean 7" in lines
+    assert "repro_sched_shed_deadline 2" in lines
+    assert 'repro_sweep_p99{idx="0"} 1.5' in lines
+    assert 'repro_sweep_p99{idx="1"} 2.5' in lines
+    assert "repro_sched_service_us_count 4" in lines
+    assert 'repro_sched_service_us{quantile="0.5"}' in text
+    assert "note" not in text and "none" not in text
+    # each metric gets exactly one TYPE line, and the doc is sorted/stable
+    types = [l for l in lines if l.startswith("# TYPE")]
+    assert len(types) == len(set(types))
+    assert text == render_prometheus({
+        "meta": {"note": "strings are skipped", "none": None},
+        "sweep": {"p99": [1.5, 2.5]},
+        "queries": {"boolean": 7},
+        "sched": {"service_us": h.snapshot(), "shed": {"deadline": 2}},
+    })
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.prom")
+        write_prometheus({"queries": {"boolean": 7}}, path)
+        with open(path) as f:
+            assert "repro_queries_boolean 7" in f.read()
+
+
+# ---------------------------------------------------------------- probe log
+def _probe(log, term=1):
+    log.log(term, "guided", n_cands=4, n_found=2, n_postings=64,
+            eps_window=1.0, bytes=32, wall_us=2.0)
+
+
+def test_probelog_rotates_at_size_cap():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "probes.jsonl")
+        log = ProbeLog(path, max_bytes=2048)
+        for i in range(200):
+            _probe(log, term=i)
+        log.close()
+        assert log.n_rotations >= 1
+        assert os.path.exists(path) and os.path.exists(path + ".1")
+        # disk held at <= ~2x the cap regardless of how much was logged
+        assert os.path.getsize(path) <= 2 * 2048
+        assert os.path.getsize(path + ".1") <= 2 * 2048
+        # both generations stay valid JSONL
+        kept = ProbeLog.read(path) + ProbeLog.read(path + ".1")
+        assert 0 < len(kept) <= 200
+        assert all(r.route == "guided" for r in kept)
+
+
+def test_probelog_drain_ingest_forwarding():
+    worker = ProbeLog()  # in-memory worker-side sink
+    with worker.context(query=3, shard=1):
+        _probe(worker, term=17)
+    wire = worker.drain()
+    assert worker.records == []  # buffer drained (n_records stays lifetime)
+    assert worker.n_records == 1
+    assert isinstance(wire[0], dict) and wire[0]["term"] == 17
+
+    host = ProbeLog()
+    host.ingest(wire)
+    [rec] = host.records
+    assert (rec.query, rec.shard, rec.term) == (3, 1, 17)
+    # None inherits the enclosing half: per-query facade context + per-shard
+    # executor context compose without clobbering each other
+    with host.context(query=9, shard=None), host.context(query=None, shard=4):
+        _probe(host, term=5)
+    assert (host.records[-1].query, host.records[-1].shard) == (9, 4)
+
+
+# ---------------------------------------------------------------- histogram
+def test_histogram_snapshot_reset_race():
+    """Writers hammer observe() while a reader snapshots/resets: every
+    snapshot must be internally consistent (one locked view, not a torn
+    read across reset)."""
+    h = Histogram()
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            h.observe(5.0)
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(300):
+            s = h.snapshot()
+            if s is None:
+                continue  # consistent empty view right after a reset
+            assert s["count"] >= 1
+            assert s["min"] == s["max"] == 5.0
+            assert s["mean"] == pytest.approx(5.0)
+            assert s["sum"] == pytest.approx(5.0 * s["count"])
+            h.reset()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+
+# ------------------------------------------------------------- integration
+@pytest.fixture(scope="module")
+def system():
+    corpus = synthesize_corpus(
+        CorpusConfig(n_docs=400, n_terms=1600, avg_doc_len=50, seed=31)
+    )
+    inv = build_inverted_index(corpus)
+    li_cfg = LearnedIndexConfig(embed_dim=16, truncation_k=16, block_size=64)
+    params, _ = init_membership(jax.random.key(2), li_cfg, corpus.n_terms,
+                                corpus.n_docs)
+    lb = fit_thresholds(params, inv)
+    return corpus, inv, li_cfg, lb
+
+
+def test_worker_spans_merge_time_aligned(system, tmp_path):
+    """The tentpole end to end: a ranked + boolean request through a real
+    process replica produces ONE coherent timeline — worker spans on their
+    own pid lane, clock-aligned, nested, carrying the request's trace_id."""
+    corpus, inv, li_cfg, lb = system
+    tracer, plog = Tracer(), ProbeLog()
+    cfg = ServeConfig(n_shards=2, sched=dict(n_replicas=1),
+                      obs=dict(trace=tracer, probe_log=plog))
+    eng = BooleanEngine(lb, inv, li_cfg, cfg)
+    q = sample_queries(corpus, 4, max_terms=4, seed=5)
+    rq = zipf_conjunctions(inv.dfs, 4, max_terms=4, seed=9)
+    with Session(eng, store_dir=str(tmp_path)) as s:
+        s.warm()
+        tracer.reset()  # only the traced requests below, not warmup
+        t0_us = (time.perf_counter_ns() - tracer.epoch_ns) / 1e3
+        r = s.submit(QueryRequest(terms=q[0]), timeout=30)
+        rr = s.submit(QueryRequest(terms=rq[0], mode=MODE_RANKED, k=5),
+                      timeout=30)
+        assert r.ok and rr.ok
+        t1_us = (time.perf_counter_ns() - tracer.epoch_ns) / 1e3
+        pids = {rep.pid for g in s._groups for rep in g.replicas}
+
+    host = [s_ for s_ in tracer.spans if s_.pid == 0]
+    worker = [s_ for s_ in tracer.spans if s_.pid != 0]
+    assert host and worker
+    assert {s_.pid for s_ in worker} <= pids
+    wnames = {s_.name for s_ in worker}
+    assert "worker.bool" in wnames and "worker.topk" in wnames
+    assert "shard.candidate_mask" in wnames  # probe work happened worker-side
+    # host side still owns admission + dispatch + merge
+    hnames = {s_.name for s_ in host}
+    assert {"sched.queue_wait", "sched.batch", "sched.dispatch",
+            "sched.merge"} <= hnames
+
+    # time alignment: every merged worker span lands inside the wall window
+    # of the two requests as seen on the HOST clock (offset applied), and
+    # lanes are stack-consistent after the mapping
+    for s_ in worker:
+        assert t0_us - 1e3 <= s_.ts_us <= s_.ts_us + s_.dur_us <= t1_us + 1e3
+    assert nesting_violations(tracer.spans, slack_us=0.5) == []
+
+    # the request's trace_id threads through to the worker-root spans
+    roots = [s_ for s_ in worker if s_.name in ("worker.bool", "worker.topk")]
+    assert roots and all(s_.attrs.get("trace_id", 0) > 0 for s_ in roots)
+
+    # worker probe records were forwarded into the host sink
+    assert plog.n_records > 0
+    assert all(r_.shard in (0, 1) for r_ in plog.records)
+
+    # the exported artifact names each replica lane
+    doc = tracer.chrome_trace()
+    lane_names = {e["args"]["name"] for e in doc["traceEvents"]
+                  if e["ph"] == "M" and e["name"] == "process_name"}
+    assert any(n.startswith("shard") for n in lane_names)
+    json.dumps(doc)
+
+
+def test_respawned_replica_resyncs_clock(system, tmp_path):
+    corpus, inv, li_cfg, lb = system
+    eng = BooleanEngine(lb, inv, li_cfg,
+                        ServeConfig(n_shards=1, sched=dict(n_replicas=1)))
+    with Session(eng, store_dir=str(tmp_path)) as s:
+        s.warm()
+        [group] = s._groups
+        [rep] = group.replicas
+        pid0, syncs0 = rep.pid, rep.clock_syncs
+        assert syncs0 >= 1 and rep.clock_offset_ns is not None
+        assert rep.clock_rtt_ns >= 0
+        with pytest.raises(WorkerFailure):
+            group.call(("crash",))  # crash + respawned retry crashes again
+        assert group.call(("ping",)) == "pong"  # respawns once more
+        assert rep.pid not in (None, pid0)
+        # every (re)spawn re-ran the ping sync: offset is fresh, not stale
+        assert rep.clock_syncs == syncs0 + 2
+        assert rep.clock_offset_ns is not None
+
+
+def test_autopsy_and_slo_report_inline(system):
+    corpus, inv, li_cfg, lb = system
+    eng = BooleanEngine(lb, inv, li_cfg, ServeConfig(n_shards=1))
+    q = sample_queries(corpus, 4, max_terms=4, seed=5)
+    with Session(eng) as s:
+        r = s.submit(QueryRequest(terms=q[0]), timeout=10)
+        assert r.ok and r.phases is not None
+        a = r.autopsy()
+        assert a["total_us"] == pytest.approx(r.queue_us + r.service_us)
+        assert a["execute_us"] > 0.0
+        for k in ("queue", "dispatch", "execute", "merge"):
+            assert a[f"{k}_us"] >= 0.0
+            assert 0.0 <= a[f"{k}_frac"] <= 1.0
+        # phase walls are measured inside the service window
+        assert (a["dispatch_us"] + a["execute_us"] + a["merge_us"]
+                <= r.service_us * 1.01 + 1.0)
+
+        # one shed outcome: an already-expired deadline
+        shed = s.submit(QueryRequest(terms=q[1], deadline_ms=-1.0), timeout=10)
+        assert isinstance(shed, Rejected)
+
+        rep = s.slo_report()
+    assert rep["window_s"] > 0 and 0 < rep["target"] < 1
+    ten = rep["tenants"]["default"]
+    assert ten["requests"] == 2 and ten["served"] == 1 and ten["shed"] == 1
+    assert ten["deadline_hit_rate"] == pytest.approx(0.5)
+    assert ten["burn_rate"] > 1.0  # half the window missed: budget burning
+    assert {"queue_us", "service_us", "dispatch_us", "execute_us",
+            "merge_us"} <= set(rep["sched"])
+
+
+def test_short_circuit_results_have_autopsy_defaults():
+    r_ = __import__("repro.serve.sched.api", fromlist=["QueryResult"])
+    qr = r_.QueryResult(ids=np.zeros(0, np.int32), queue_us=0.0,
+                        service_us=0.0)
+    a = qr.autopsy()  # phases=None: a short-circuit never saw a batch
+    assert a["total_us"] == 0.0 and a["execute_frac"] == 0.0
+
+
+def test_trace_context_pickles_and_defaults():
+    import pickle
+
+    ctx = TraceContext(trace_id=5, trace=True, probe=False)
+    back = pickle.loads(pickle.dumps(ctx))
+    assert back == ctx and back.trace_id == 5
+    assert TraceContext() == TraceContext(trace_id=0, trace=False, probe=False)
