@@ -25,6 +25,11 @@ any regresses beyond the tolerance:
                                 batching scheduler, same run), overload
                                 p99_over_deadline (admitted tail vs the
                                 deadline budget under 4x overload)
+  BENCH_dispatch_overhead.json  host_us_per_dispatch (host-bridge µs per
+                                fused dispatch), bridge_over_kernel (host
+                                bridge / device-blocked time, same run —
+                                the bridge regrowing past the kernel is
+                                the regression the arena work removed)
 
 Storage/bytes metrics are deterministic (seeded corpora), so any movement is
 a real code change.  The latency metric is the guided/full *ratio* measured
@@ -71,6 +76,10 @@ METRICS = [
     # pipeline, same run (machine-normalized); the floor is the acceptance
     # bar — the fused path must beat the many-dispatch pipeline anywhere
     ("BENCH_ranked_topk.json", "fused.latency_ratio", 1.0),
+    # fused one-dispatch path vs the all-numpy host multi-phase engine, same
+    # run; with the device-resident arena the single dispatch must beat the
+    # host outright — not just cut the dispatch count
+    ("BENCH_ranked_topk.json", "fused.latency_ratio_host", 1.0),
     # span tracer on vs off, interleaved passes within one run; the floor is
     # the design budget — tracing a served batch must stay within ~5%
     ("BENCH_serve_latency.json", "trace_overhead_ratio", 1.05),
@@ -85,6 +94,14 @@ METRICS = [
     # admitted p99 / deadline under 4x-capacity overload: deadline shedding
     # must keep the admitted tail within 2x the budget (shed, don't convoy)
     ("BENCH_serve_sustained.json", "overload.p99_over_deadline", 2.0),
+    # host-bridge µs per fused dispatch (plan/pad/group/extract around the
+    # device call); wall-clock, so the floor is generous — but the bridge
+    # regrowing to several ms per dispatch fails anywhere
+    ("BENCH_dispatch_overhead.json", "host_us_per_dispatch", 6000.0),
+    # host bridge / device-blocked kernel time within one run (machine-
+    # normalized); the floor is the acceptance bar — host work must stay
+    # cheaper than the device execution it overlaps
+    ("BENCH_dispatch_overhead.json", "bridge_over_kernel", 1.0),
 ]
 
 # (file, dotted-path of a higher-is-better metric, absolute cap the limit is

@@ -1,0 +1,99 @@
+"""Dispatch-overhead microbenchmark: host µs per fused dispatch.
+
+The tentpole claim of the device-resident ranked path is that per-dispatch
+host work — planning, padding, grouping, result extraction — stopped
+dominating: the perf-counter split in the fused bridge (RankedStats
+``fused_bridge_ns`` vs ``fused_kernel_ns``) measures exactly that, and this
+benchmark turns it into a gated per-dispatch / per-query number instead of
+a by-product of the roofline.
+
+Emits BENCH_dispatch_overhead.json:
+  host_us_per_dispatch   host-bridge µs per fused_topk_batch call (gated
+                         by check_regression.py with a generous absolute
+                         floor — wall-clock on shared runners is noisy, but
+                         the bridge regrowing past the kernel fails anywhere)
+  host_us_per_query      the same spread over the queries in the batch
+  kernel_us_per_dispatch device-blocked µs per call (informational)
+  bridge_over_kernel     host bridge / kernel time (the ISSUE's
+                         latency_ratio_host story at dispatch granularity)
+  autotune               the tile search's winning config + timings; the
+                         search also (re)writes artifacts/autotune_cache.json,
+                         which CI uploads as an artifact
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+BENCH_PATH = "BENCH_dispatch_overhead.json"
+
+N_QUERIES = 64
+TOP_K = 10
+PASSES = 5
+
+
+def overhead_rows(write_json: bool = True):
+    try:
+        from benchmarks.ranked_topk import N_DOCS, N_TERMS, SEED, _system
+    except ImportError:  # script mode: benchmarks/ itself is sys.path[0]
+        from ranked_topk import N_DOCS, N_TERMS, SEED, _system
+    from repro.data.queries import zipf_disjunctions
+    from repro.kernels.autotune import autotune_dense
+    from repro.serve import BooleanEngine, ServeConfig
+
+    # tune first: the measured dispatches then run the configuration CI ships
+    tune = autotune_dense()
+
+    inv, li_cfg, lb = _system()
+    queries, _ = zipf_disjunctions(inv.dfs, N_QUERIES, seed=SEED + 1)
+    eng = BooleanEngine(
+        lb, inv, li_cfg, ServeConfig(n_shards=1, ranked=dict(fused_kernel=True))
+    )
+    for sh in eng.shards:
+        sh.ensure_payloads()
+    eng.query_topk(queries, TOP_K)  # arena build + jit warm, untimed
+    eng.reset_stats()
+    t0 = time.time()
+    for _ in range(PASSES):
+        eng.query_topk(queries, TOP_K)
+    wall = time.time() - t0
+    s = eng.metrics.snapshot()["ranked"]
+    dispatches = PASSES  # one fused_topk_batch per query_topk pass at K=1
+    host_us_dispatch = s["fused_bridge_ns"] / 1e3 / dispatches
+    kernel_us_dispatch = s["fused_kernel_ns"] / 1e3 / dispatches
+    out = {
+        "workload": {
+            "n_docs": N_DOCS,
+            "n_terms": N_TERMS,
+            "n_queries": N_QUERIES,
+            "top_k": TOP_K,
+            "passes": PASSES,
+        },
+        "host_us_per_dispatch": host_us_dispatch,
+        "host_us_per_query": host_us_dispatch / N_QUERIES,
+        "kernel_us_per_dispatch": kernel_us_dispatch,
+        "bridge_over_kernel": s["fused_bridge_ns"] / max(1, s["fused_kernel_ns"]),
+        "wall_us_per_query": 1e6 * wall / (PASSES * N_QUERIES),
+        "autotune": tune,
+    }
+    if write_json:
+        with open(BENCH_PATH, "w") as f:
+            json.dump(out, f, indent=2)
+    rows = [
+        ("dispatch/host_overhead", host_us_dispatch,
+         f"per_query_us={out['host_us_per_query']:.2f}"
+         f"_bridge_over_kernel={out['bridge_over_kernel']:.3f}"),
+        ("dispatch/autotune", tune["best_us"],
+         f"dense={tune['dense']['row_quantum']}x{tune['dense']['term_quantum']}"
+         f"_device={tune['device']}"),
+    ]
+    if write_json:
+        rows.append(("dispatch/json", 0.0, f"wrote {BENCH_PATH}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in overhead_rows():
+        print(f"{name},{us:.1f},{derived}")

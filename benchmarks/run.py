@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV.
                                                   (+ BENCH_serve_latency.json)
   serve_sustained/.. continuous-batching scheduler vs serial fan-out under
                      sustained Poisson load        (+ BENCH_serve_sustained.json)
+  dispatch/.. fused-dispatch host overhead + tile autotune
+                                                  (+ BENCH_dispatch_overhead.json,
+                                                   artifacts/autotune_cache.json)
   kernel/.. Pallas kernels, interpret-mode        (plumbing check)
   roofline/.. per (arch × shape) terms from dryrun_16x16.json if present
 """
@@ -27,6 +30,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     from benchmarks.paper_figs import _collections, fig1_rows, fig2_rows, fig3_rows
     from benchmarks.codec_kernels import codec_rows, kernel_rows, unpack_rows
+    from benchmarks.dispatch_overhead import overhead_rows
     from benchmarks.guided_intersect import guided_rows
     from benchmarks.learned_postings import learned_rows
     from benchmarks.ranked_topk import ranked_rows
@@ -48,6 +52,7 @@ def main() -> None:
     rows += ranked_rows()
     rows += latency_rows()
     rows += sustained_rows()
+    rows += overhead_rows()
     rows += kernel_rows()
     for path in ("/root/repo/dryrun_16x16.json", "dryrun_16x16.json"):
         if os.path.exists(path):

@@ -250,6 +250,8 @@ def latency_rows(write_json: bool = True):
     fused_roof = index_roofline(
         fs["fused_stream_bytes"], fs["fused_device_bytes"], fs["fused_lanes"],
         fused_seconds, N_RANKED,
+        kernel_seconds=fs["fused_kernel_ns"] / 1e9,
+        bridge_seconds=fs["fused_bridge_ns"] / 1e9,
     )
 
     # ---- tracing overhead (gated): the same interleaved off/on measure

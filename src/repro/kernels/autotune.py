@@ -1,0 +1,204 @@
+"""Tile autotuner for the fused dense ranked dispatch.
+
+The dense one-dispatch path (kernels.fused_query.dense) pads every batch to
+a (rows, terms) bucket before jit: the row quantum and term quantum trade
+padding waste (large quanta score pad rows/gather pad terms) against
+jit-shape churn (small quanta compile one executable per batch size).  The
+right point depends on the device — how much a wasted lane costs vs a
+compile — so it is *searched*, not hard-coded: ``autotune_dense`` times a
+mixed-batch-size synthetic workload under each (row_quantum, term_quantum)
+candidate on the live backend, picks the fastest, applies it
+(``dense.set_tile_params``) and persists the choice to a JSON cache keyed
+by device kind.
+
+The cache (``artifacts/autotune_cache.json``, uploaded as a CI artifact) is
+a plain ``{device_key: {"dense": {...}, "timings_us": {...}}}`` map:
+``apply_cache()`` restores a previously tuned configuration at startup
+without re-running the search, and a cache tuned on one device kind never
+leaks onto another.
+
+Run directly (``python -m repro.kernels.autotune``) to tune and write the
+cache; the dispatch-overhead benchmark does the same in CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+DEFAULT_CACHE = os.path.join("artifacts", "autotune_cache.json")
+ROW_QUANTA = (4, 8, 16)
+TERM_QUANTA = (2, 4, 8)
+
+
+def device_key() -> str:
+    """Stable identity of the backend the timings were taken on."""
+    import jax
+
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', 'unknown')}"
+
+
+def _bucket(n: int, quantum: int) -> int:
+    b = quantum
+    while b < n:
+        b *= 2
+    return b
+
+
+def _synthetic_arena(n_docs: int, n_terms: int, avg_len: int, seed: int):
+    """A DeviceArena over synthetic postings — no index/store required."""
+    import jax.numpy as jnp
+
+    from repro.kernels.arena import DeviceArena
+
+    rng = np.random.default_rng(seed)
+    table = np.zeros((n_terms + 1, n_docs), np.uint8)
+    lens = np.zeros(n_terms, np.int64)
+    for t in range(n_terms):
+        n = int(min(n_docs, 1 + rng.poisson(avg_len)))
+        ids = rng.choice(n_docs, size=n, replace=False)
+        table[t, ids] = rng.integers(1, 32, size=n)
+        lens[t] = n
+    return DeviceArena(
+        n_docs=n_docs, n_terms=n_terms, table=jnp.asarray(table), host_lens=lens
+    )
+
+
+def _workload(n_terms: int, batch_sizes, terms_per_query: int, seed: int):
+    """Mixed-size batches of random term lists — the shapes real coalesced
+    traffic produces, so the tuner pays for jit churn exactly when serving
+    would."""
+    rng = np.random.default_rng(seed)
+    batches = []
+    for q in batch_sizes:
+        batch = []
+        for _ in range(q):
+            w = int(rng.integers(2, terms_per_query + 1))
+            batch.append(sorted(rng.choice(n_terms, size=w, replace=False)))
+        batches.append(batch)
+    return batches
+
+
+def _time_config(arena, batches, k: int, row_q: int, term_q: int, reps: int) -> float:
+    from repro.kernels.fused_query import dense
+
+    dense.set_tile_params(row_q, term_q)
+
+    def run_once() -> None:
+        outs = []
+        for batch in batches:
+            Qb = _bucket(len(batch), row_q)
+            T = _bucket(max(len(ts) for ts in batch), term_q)
+            qt = np.full((Qb, T), -1, np.int32)
+            for i, ts in enumerate(batch):
+                qt[i, : len(ts)] = ts
+            floors = np.zeros(Qb, np.int32)
+            outs.append(dense.dense_topk(arena, qt, floors, k=k))
+        for ids, scores, _ in outs:
+            ids.block_until_ready()
+            scores.block_until_ready()
+
+    run_once()  # absorb compilation: steady-state dispatch is what's tuned
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_once()
+        best = min(best, time.perf_counter() - t0)
+    return float(best)
+
+
+def autotune_dense(
+    *,
+    n_docs: int = 4096,
+    n_terms: int = 512,
+    avg_len: int = 48,
+    batch_sizes=(1, 3, 5, 8, 13, 16),
+    terms_per_query: int = 6,
+    k: int = 10,
+    reps: int = 3,
+    seed: int = 7,
+    cache_path: str | None = DEFAULT_CACHE,
+) -> dict:
+    """Search (row_quantum, term_quantum), apply the winner, persist it.
+
+    Returns ``{"device": key, "dense": best_params, "timings_us": {...}}``;
+    the process-global tile params are left set to the winner.
+    """
+    from repro.kernels.fused_query import dense
+
+    arena = _synthetic_arena(n_docs, n_terms, avg_len, seed)
+    batches = _workload(n_terms, batch_sizes, terms_per_query, seed + 1)
+    prev = dense.tile_params()
+    timings: dict[str, float] = {}
+    best_cfg, best_s = None, np.inf
+    try:
+        for row_q in ROW_QUANTA:
+            for term_q in TERM_QUANTA:
+                s = _time_config(arena, batches, k, row_q, term_q, reps)
+                timings[f"{row_q}x{term_q}"] = 1e6 * s
+                if s < best_s:
+                    best_cfg, best_s = (row_q, term_q), s
+    finally:
+        # the winner sticks; anything else (including an exception midway)
+        # restores the tunables the process started with
+        if best_cfg is not None:
+            dense.set_tile_params(*best_cfg)
+        else:
+            dense.set_tile_params(prev["row_quantum"], prev["term_quantum"])
+    report = {
+        "device": device_key(),
+        "dense": {"row_quantum": best_cfg[0], "term_quantum": best_cfg[1]},
+        "best_us": 1e6 * best_s,
+        "timings_us": timings,
+        "workload": {
+            "n_docs": n_docs,
+            "n_terms": n_terms,
+            "batch_sizes": list(batch_sizes),
+            "k": k,
+        },
+    }
+    if cache_path:
+        save_cache(report, cache_path)
+    return report
+
+
+def save_cache(report: dict, path: str = DEFAULT_CACHE) -> None:
+    """Merge one device's tuning into the on-disk cache (other keys kept)."""
+    cache: dict = {}
+    try:
+        with open(path) as f:
+            cache = json.load(f)
+    except (OSError, ValueError):
+        pass
+    cache[report["device"]] = {k: v for k, v in report.items() if k != "device"}
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cache, f, indent=2)
+
+
+def apply_cache(path: str = DEFAULT_CACHE) -> dict | None:
+    """Restore this device's tuned tile params from the cache, if present."""
+    from repro.kernels.fused_query import dense
+
+    try:
+        with open(path) as f:
+            cache = json.load(f)
+    except (OSError, ValueError):
+        return None
+    entry = cache.get(device_key())
+    if not entry or "dense" not in entry:
+        return None
+    dense.set_tile_params(
+        int(entry["dense"]["row_quantum"]), int(entry["dense"]["term_quantum"])
+    )
+    return entry
+
+
+if __name__ == "__main__":
+    r = autotune_dense()
+    print(json.dumps(r, indent=2))

@@ -1,0 +1,159 @@
+"""On-device ranked scoring loop: one jitted dispatch per batch bucket.
+
+The multi-phase path keeps θ on the host: every peel round decodes a term,
+merges, re-partitions — N host<->device round trips per batch whose Python
+bookkeeping the profiler shows dominating the fused wall clock.  This module
+collapses the whole scoring loop into **one** jitted callable over the
+shard's resident ``DeviceArena`` (kernels.arena):
+
+  1. gather — each query row gathers its T term rows from the resident
+     (n_terms + 1, n_docs) impact table (padded slots hit the all-zero pad
+     row) and sums over the term axis into a (Q, n_docs) int32 accumulator.
+     This replaces the COO lane expansion + scatter-add formulation, which
+     XLA:CPU serializes at ~70 ns/posting — the gather+sum is a contiguous
+     streaming read of T rows per query;
+  2. θ-peel — a ``lax.while_loop`` peels the top-k rounds on device: per
+     round one masked argmax per row (ties resolve to the smaller doc id,
+     the oracle's order), the peeled cell zeroed in place, rounds stopping
+     early once no row can still beat its floor.  The loop's round counter
+     comes back to the host so accounting can charge the accumulator scans
+     actually performed.
+
+Exactness: the dense sum over term rows equals the host merge's posting
+sums (integer adds, order-free), per-row floors mask exactly
+``score > max(floor, 0)`` (the ``select_topk`` rule), and the argmax tie
+discipline matches the oracle's (score desc, id asc) — so results are
+bit-identical to the multi-phase engine and the brute-force oracle, which
+tests and benchmarks assert.
+
+Shapes are padded to power-of-two buckets — (rows, term slots, k) — so jit
+compiles a handful of specializations; ``observed_shapes()`` /
+``warm_shape()`` let the scheduler snapshot and restore exactly the
+compiled set across worker restarts (``cache_size()`` proves re-jit-free).
+The row/term bucket quanta are the dense path's autotuned tile knobs
+(kernels.autotune).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NEVER = 1 << 30  # empty heap-slot sentinel (matches kernel.NEVER)
+
+# the peel loop costs one (Q, n_docs) scan per round: past this k the
+# bucketed kernel path wins, so the bridge routes large-k items there
+DENSE_MAX_K = 32
+
+# shape-bucket quanta: power-of-two multiples bound the jit shape count;
+# the autotuner (kernels.autotune) may retune these per device kind
+_ROW_QUANTUM = 8
+_TERM_QUANTUM = 4
+
+# static shapes this process has dispatched: (n_docs, Q, T, k)
+_SHAPES: set[tuple[int, int, int, int]] = set()
+
+
+def tile_params() -> dict[str, int]:
+    return {"row_quantum": _ROW_QUANTUM, "term_quantum": _TERM_QUANTUM}
+
+
+def set_tile_params(row_quantum: int | None = None, term_quantum: int | None = None) -> None:
+    global _ROW_QUANTUM, _TERM_QUANTUM
+    if row_quantum is not None:
+        _ROW_QUANTUM = max(1, int(row_quantum))
+    if term_quantum is not None:
+        _TERM_QUANTUM = max(1, int(term_quantum))
+
+
+def _dense_impl(table, qt, floors, *, k: int):
+    import jax
+    import jax.numpy as jnp
+
+    Q, T = qt.shape
+    n_pad = table.shape[0] - 1  # all-zero pad row
+    t = jnp.where(qt >= 0, qt, n_pad)
+    scores = table[t].astype(jnp.int32).sum(axis=1)  # (Q, n_docs)
+
+    fl = jnp.maximum(floors, 0)[:, None]  # (Q, 1): select_topk's > floor rule
+    rows_iota = jnp.arange(Q)
+    out_i = jnp.full((Q, k), NEVER, jnp.int32)
+    out_s = jnp.zeros((Q, k), jnp.int32)
+
+    def cond(carry):
+        j, go, *_ = carry
+        return (j < k) & go
+
+    def body(carry):
+        j, _, scores, out_i, out_s = carry
+        elig = jnp.where(scores > fl, scores, 0)
+        best = jnp.argmax(elig, axis=1).astype(jnp.int32)  # first max: min id
+        val = jnp.take_along_axis(elig, best[:, None], axis=1)[:, 0]
+        hit = val > 0
+        out_i = out_i.at[:, j].set(jnp.where(hit, best, NEVER))
+        out_s = out_s.at[:, j].set(jnp.where(hit, val, 0))
+        # zero the peeled cell in place; a missed row zeroes an ineligible
+        # cell (best = 0 with every score <= floor), which changes nothing
+        scores = scores.at[rows_iota, best].set(0)
+        return j + 1, hit.any(), scores, out_i, out_s
+
+    j, _, scores, out_i, out_s = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.bool_(True), scores, out_i, out_s)
+    )
+    return out_i, out_s, j
+
+
+_JITTED = None
+
+
+def _jitted():
+    global _JITTED
+    if _JITTED is None:
+        import jax
+
+        _JITTED = jax.jit(_dense_impl, static_argnames=("k",))
+    return _JITTED
+
+
+def dense_topk(arena, qt: np.ndarray, floors: np.ndarray, *, k: int):
+    """One device dispatch: (Q, T) padded term rows -> (Q, k) ids/scores.
+
+    ``arena`` is the shard's DeviceArena (resident buffers — nothing index-
+    derived is staged here); ``qt`` is -1-padded term ids, ``floors`` the
+    per-row strict score floors.  Returns device arrays (ids, scores,
+    rounds) — callers block when they materialize, which is where the
+    pipelined bridge defers to.
+    """
+    import jax.numpy as jnp
+
+    Q, T = qt.shape
+    _SHAPES.add((arena.n_docs, Q, T, int(k)))
+    arena.counters.hits += 1
+    return _jitted()(
+        arena.table, jnp.asarray(qt), jnp.asarray(floors), k=int(k)
+    )
+
+
+def cache_size() -> int:
+    """Compiled-specialization count (re-jit-free assertions in tests)."""
+    return int(_jitted()._cache_size()) if _JITTED is not None else 0
+
+
+def observed_shapes() -> list[tuple[int, int, int, int]]:
+    """Static shapes dispatched by this process — the warm-snapshot payload."""
+    return sorted(_SHAPES)
+
+
+def warm_shape(arena, shape) -> None:
+    """Pre-compile one observed shape against ``arena`` with inert inputs.
+
+    Compilation keys on static shapes only, so an all-pad term matrix
+    compiles the exact executable real traffic will hit.
+    """
+    n_docs, Q, T, k = (int(x) for x in shape)
+    if n_docs != arena.n_docs:
+        return
+    qt = np.full((Q, T), -1, np.int32)
+    floors = np.zeros(Q, np.int32)
+    out = dense_topk(arena, qt, floors, k=k)
+    import jax
+
+    jax.block_until_ready(out)

@@ -36,12 +36,27 @@ shapes — the same recompile-convoy discipline as the boolean path, which
 are *grouped* by candidate bucket, one dispatch per populated bucket: a
 handful of dispatches per batch instead of one maximally-padded tile (or
 hundreds of multi-phase host hops).
+
+When the shard carries a resident ``DeviceArena`` (kernels.arena), items
+without required terms and with k <= DENSE_MAX_K skip the host peel
+entirely: the whole scoring loop — gather, accumulate, θ-peel — runs as
+**one** jitted dispatch over the resident impact table
+(kernels.fused_query.dense), the host contributing only the (Q, T) term-id
+tile.  Dispatches are *pipelined*: dense groups launch first and stay in
+flight while the host peels and packs the legacy items, and their outputs
+are materialized only at merge time — host plan/pack of the next group
+overlaps device execution of the previous one.  ``RankedStats`` splits the
+wall into ``fused_kernel_ns`` (blocked on device) and ``fused_bridge_ns``
+(host bridge) so the roofline measures the kernel, not Python.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.kernels.fused_query.dense import DENSE_MAX_K
 
 from repro.kernels.fused_query.kernel import B_BLK, NEVER, fused_topk
 from repro.kernels.fused_query.ref import fused_topk_ref
@@ -257,33 +272,125 @@ def fused_topk_batch(
     from repro.rank.topk import RankedStats
 
     stats = stats if stats is not None else RankedStats()
+    t_all0 = time.perf_counter_ns()
+    kernel_ns0 = stats.fused_kernel_ns
     results: list = [None] * len(items)
-    pend: list[tuple[int, _Pending]] = []
+
+    # split: items a resident arena can answer in one dense dispatch (no
+    # required terms, peelable k) never touch the host peel at all
+    arena = getattr(src, "arena", None) if use_kernel else None
+    dense_items: list[tuple[int, list[int], int, int]] = []
+    legacy: list[int] = []
     for i, (terms, k, required, floor) in enumerate(items):
+        if arena is None or len(required) or not (0 < k <= DENSE_MAX_K):
+            legacy.append(i)
+            continue
+        stats.queries += 1
+        tt = sorted({int(t) for t in terms if src.n(int(t)) > 0})
+        if not tt:
+            results[i] = _EMPTY
+            continue
+        n_sum = sum(src.n(t) for t in tt)
+        stats.exhaustive_postings += n_sum
+        stats.scored_postings += n_sum
+        stats.exhaustive_queries += 1
+        dense_items.append((i, tt, int(k), int(floor)))
+
+    # pipelined dispatch: dense groups launch first and stay in flight on
+    # the device while the host peels and packs the legacy items below
+    inflight = _dispatch_dense(arena, dense_items, stats) if dense_items else []
+
+    pend: list[tuple[int, _Pending]] = []
+    for i in legacy:
+        terms, k, required, floor = items[i]
         r = _peel(src, terms, k, required, floor, exhaustive_cutoff, stats)
         if isinstance(r, _Pending):
             pend.append((i, r))
         else:
             results[i] = r
-    if not pend:
-        return results
 
-    # Candidate counts are heavy-tailed (median ~100, max = shard size): a
-    # single dense C = max(C_i) tile would make every query pay the widest
-    # query's candidate axis.  Group rows by power-of-two candidate bucket
-    # instead — one dispatch per populated bucket (a handful per batch, vs
-    # hundreds of per-term hops on the multi-phase path), each with a tight
-    # (T, C, W) tile for its rows.
-    pbits = int(src.payload_bits)
-    groups: dict[int, list[tuple[int, _Pending]]] = {}
-    for i, p in pend:
-        groups.setdefault(_bucket(len(p.cands), _CANDQ), []).append((i, p))
-    for C, grp in sorted(groups.items()):
-        _dispatch_group(
-            src, grp, C, pbits, stats, results,
-            use_kernel=use_kernel, interpret=interpret,
-        )
+    if pend:
+        # Candidate counts are heavy-tailed (median ~100, max = shard size):
+        # a single dense C = max(C_i) tile would make every query pay the
+        # widest query's candidate axis.  Group rows by power-of-two
+        # candidate bucket instead — one dispatch per populated bucket (a
+        # handful per batch, vs hundreds of per-term hops on the multi-phase
+        # path), each with a tight (T, C, W) tile for its rows.
+        pbits = int(src.payload_bits)
+        groups: dict[int, list[tuple[int, _Pending]]] = {}
+        for i, p in pend:
+            groups.setdefault(_bucket(len(p.cands), _CANDQ), []).append((i, p))
+        for C, grp in sorted(groups.items()):
+            _dispatch_group(
+                src, grp, C, pbits, stats, results,
+                use_kernel=use_kernel, interpret=interpret,
+            )
+
+    # deferred merge: only now block on the in-flight dense outputs
+    for fut in inflight:
+        _extract_dense(fut, stats, results)
+    stats.fused_bridge_ns += max(
+        0, (time.perf_counter_ns() - t_all0) - (stats.fused_kernel_ns - kernel_ns0)
+    )
     return results
+
+
+def _dispatch_dense(arena, dense_items, stats):
+    """Dense-eligible items -> one resident-arena dispatch per (k) bucket.
+
+    Returns in-flight handles (device arrays still executing); the caller
+    materializes them at merge time — that deferral is the pipeline.
+    """
+    from repro.kernels.fused_query import dense
+
+    tp = dense.tile_params()
+    groups: dict[int, list] = {}
+    for it in dense_items:
+        groups.setdefault(_bucket(it[2], 1), []).append(it)
+    inflight = []
+    for kb, grp in sorted(groups.items()):
+        Qb = _bucket(len(grp), tp["row_quantum"])
+        T = _bucket(max(len(tt) for _, tt, _, _ in grp), tp["term_quantum"])
+        qt = np.full((Qb, T), -1, np.int32)
+        floors = np.zeros(Qb, np.int32)
+        for row, (_, tt, _, fl) in enumerate(grp):
+            qt[row, : len(tt)] = tt
+            floors[row] = fl
+        stats.fused_queries += len(grp)
+        stats.fused_lanes += sum(arena.lanes(tt) for _, tt, _, _ in grp)
+        # stream traffic: the table rows each live term slot gathers
+        stats.fused_stream_bytes += (
+            sum(len(tt) for _, tt, _, _ in grp) * arena.n_docs * arena.itemsize
+        )
+        out = dense.dense_topk(arena, qt, floors, k=kb)
+        inflight.append((arena, grp, kb, Qb, T, out))
+    return inflight
+
+
+def _extract_dense(fut, stats, results):
+    """Materialize one in-flight dense dispatch and merge its rows."""
+    arena, grp, kb, Qb, T, out = fut
+    n_docs, isz = arena.n_docs, arena.itemsize
+    with trace.span("kernel.fused_query", queries=int(Qb), terms=int(T),
+                    k=int(kb), dense=1, candidates=int(n_docs)):
+        t0 = time.perf_counter_ns()
+        ids_o, sc_o, rounds = (np.asarray(x) for x in out)
+        stats.fused_kernel_ns += time.perf_counter_ns() - t0
+    # device traffic actually performed: table-row gather, accumulator,
+    # one accumulator scan per peel round performed, in/out tiles
+    stats.fused_device_bytes += (
+        Qb * T * n_docs * isz
+        + Qb * n_docs * 4
+        + int(rounds) * Qb * n_docs * 4
+        + Qb * T * 4 + Qb * 4
+        + 2 * Qb * kb * 4
+    )
+    for row, (i, _tt, k, _fl) in enumerate(grp):
+        hit = sc_o[row] > 0  # non-empty heap slots form a prefix
+        results[i] = TopKResult(
+            ids=ids_o[row][hit][:k].astype(np.int32),
+            scores=sc_o[row][hit][:k].astype(np.int64),
+        )
 
 
 def _dispatch_group(src, pend, C, pbits, stats, results, *, use_kernel, interpret):
@@ -356,11 +463,13 @@ def _dispatch_group(src, pend, C, pbits, stats, results, *, use_kernel, interpre
         if use_kernel:
             import jax.numpy as jnp
 
+            t0 = time.perf_counter_ns()
             ids_o, sc_o = fused_topk(
                 *(jnp.asarray(a) for a in arrays), k=K, pbits=pbits,
                 interpret=interpret,
             )
             ids_o, sc_o = np.asarray(ids_o), np.asarray(sc_o)
+            stats.fused_kernel_ns += time.perf_counter_ns() - t0
         else:
             ids_o, sc_o = fused_topk_ref(*arrays, k=K, pbits=pbits)
 

@@ -79,6 +79,11 @@ class RankedStats:
     fused_lanes: int = 0
     fused_stream_bytes: int = 0
     fused_device_bytes: int = 0
+    # wall split of the fused bridge: ns spent blocked on device execution
+    # (materializing dispatch outputs) vs ns of host plan/pack/merge — the
+    # kernel_seconds / bridge_seconds inputs of the roofline accounting
+    fused_kernel_ns: int = 0
+    fused_bridge_ns: int = 0
 
     def touched(self) -> int:
         return self.scored_postings + self.probed_postings
@@ -88,6 +93,7 @@ class RankedStats:
             "queries", "exhaustive_queries", "scored_postings",
             "probed_postings", "exhaustive_postings", "fused_queries",
             "fused_lanes", "fused_stream_bytes", "fused_device_bytes",
+            "fused_kernel_ns", "fused_bridge_ns",
         )}
         d["touched_postings"] = self.touched()
         d["scored_fraction"] = (

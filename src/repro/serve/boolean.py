@@ -462,7 +462,8 @@ class BooleanEngine:
             for f in ("queries", "exhaustive_queries", "scored_postings",
                       "probed_postings", "exhaustive_postings",
                       "fused_queries", "fused_lanes", "fused_stream_bytes",
-                      "fused_device_bytes")
+                      "fused_device_bytes", "fused_kernel_ns",
+                      "fused_bridge_ns")
         }).as_dict()
         # shard counters tally (query, shard) pairs; report the facade's
         # query count on top so per-query averages come out right

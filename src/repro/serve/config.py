@@ -68,6 +68,11 @@ class RankedConfig:
     # (kernels.fused_query) instead of the multi-phase probe/unpack/score/
     # select pipeline; bit-identical, with the multi-phase path as oracle
     fused_kernel: bool = False
+    # keep a device-resident impact arena per shard (kernels.arena) so the
+    # fused path answers no-required-term items in one dense dispatch with
+    # zero per-call index staging; built lazily on first fused use, only
+    # while the shard fits the arena's size caps
+    device_arena: bool = True
 
     def __bool__(self) -> bool:  # legacy truthiness: `if cfg.ranked:`
         return self.enabled
@@ -89,6 +94,24 @@ class SchedConfig:
     tenant_quota: int | None = None  # max queued requests per tenant
     worker_retries: int = 1  # batch retries after a worker crash
     spawn_timeout_s: float = 120.0  # process-replica ready handshake bound
+    # bounded coalescing window, measured from the *head* arrival's submit
+    # time: while a forming batch is below max_batch and its oldest entry
+    # has waited less than this, take_batch lingers for more arrivals (adds
+    # at most coalesce_us to any request's latency; a batch that already
+    # waited while runners were busy dispatches immediately)
+    coalesce_us: int = 0
+    # forward the global running kth-score floor across shard-group ranked
+    # dispatches: groups run in ascending-lo order and each later group
+    # inherits the merged heap's kth score as its floor, so shards stop
+    # scoring candidates the global top-k already excludes
+    forward_floor: bool = True
+    # replay each replica's recent call signatures after a respawn so the
+    # fresh worker re-compiles (or restores from the persistent compilation
+    # cache) every executable the crashed one had warm
+    warm_snapshot: bool = True
+    # directory for JAX's persistent compilation cache in workers (None =
+    # in-memory jit only); best-effort — unsupported builds ignore it
+    compile_cache_dir: str | None = None
 
 
 # legacy flat kwarg -> (sub-config attr, field on it)
@@ -276,5 +299,6 @@ class ServeConfig:
                 topk_exhaustive_cutoff=self.ranked.topk_exhaustive_cutoff,
                 score_kernel=self.ranked.score_kernel,
                 fused_kernel=self.ranked.fused_kernel,
+                device_arena=self.ranked.device_arena,
             ),
         }

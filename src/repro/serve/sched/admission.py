@@ -187,6 +187,21 @@ class AdmissionQueue:
                 self._expire_locked()
                 if not self._items:
                     return []
+            if self.cfg.coalesce_us > 0 and len(self._items) < max_batch:
+                # bounded coalescing window, anchored to the *head* arrival's
+                # submit time: light-load singleton batches linger for
+                # stragglers, but a batch that already aged while runners
+                # were busy dispatches immediately — no request ever waits
+                # more than coalesce_us beyond its submit for batching
+                deadline = self._items[0].t_submit + self.cfg.coalesce_us / 1e6
+                while len(self._items) < max_batch:
+                    left = deadline - self.clock()
+                    if left <= 0 or self._closed:
+                        break
+                    self._nonempty.wait(timeout=left)
+                self._expire_locked()
+                if not self._items:
+                    return []
             # the head's mode goes first, and later same-mode entries
             # coalesce past other-mode entries (FIFO preserved *within*
             # each mode; the skipped mode is left at the head for the next

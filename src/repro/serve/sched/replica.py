@@ -28,11 +28,27 @@ buffer and probe records, see sched/worker.py) are ingested into the host
 tracer / probe sink right where the reply lands.  ``ReplicaGroup.call``
 re-activates the configured tracer around the dispatch because it often runs
 on a fan-pool thread that has no ambient tracer of its own.
+
+Warm snapshots close the respawn compile gap.  A worker process owns every
+jit/Pallas executable its shard ever compiled, so a crash used to mean the
+replacement re-pays each padded-shape compilation on first contact.  A
+``ProcessReplica`` therefore keeps a small *warm log* — one sanitized
+(trace-context-stripped) representative message per distinct dispatch shape
+— and replays it into every freshly spawned process right after the ready
+handshake, before the replica serves its next request.  Paired with the
+persistent XLA compilation cache (sched/worker.py points
+``jax_compilation_cache_dir`` at the shard-store), the replay re-traces
+against on-disk executables instead of recompiling, so a respawned worker
+is serving-warm and bit-identical from its first real dispatch.  The log
+round-trips through ``Session.warm()``'s ``warm_snapshot.json`` so even a
+brand-new session restores the previous run's shape coverage.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import threading
+
+import numpy as np
 
 from repro.obs import trace
 from repro.obs.collate import estimate_clock_offset, ingest_worker_spans
@@ -65,6 +81,10 @@ class InlineReplica:
                 return "pong"
             if op == "stats":
                 return self._shard.metrics.snapshot()
+            if op == "caches":
+                from repro.serve.sched.worker import cache_report
+
+                return cache_report(self._shard)
             raise ReplicaError(f"unknown op {op!r}")
 
     def close(self) -> None:
@@ -80,6 +100,8 @@ class ProcessReplica:
     lane in the exported trace.
     """
 
+    _WARM_LIMIT = 32  # distinct dispatch shapes worth replaying into a respawn
+
     def __init__(
         self,
         spec: dict,
@@ -87,16 +109,21 @@ class ProcessReplica:
         spawn_timeout_s: float = 120.0,
         obs=None,
         label: str | None = None,
+        record_warm: bool = True,
     ):
         self.spec = spec
         self.spawn_timeout_s = spawn_timeout_s
         self.obs = obs
         self.label = label or f"shard{spec['shard_idx']}-worker"
+        self.record_warm = record_warm
         self.inflight = 0
         self.pid: int | None = None
         self.clock_offset_ns: int | None = None  # worker clock - host clock
         self.clock_rtt_ns: int | None = None
         self.clock_syncs = 0  # one per (re)spawn; tests assert the re-sync
+        self.warm_replays = 0  # entries replayed into the last (re)spawn
+        # signature -> sanitized (ctx-stripped) message; ordered, bounded
+        self._warm_log: dict = {}
         self._lock = threading.Lock()  # pipe is strict request/response
         self._proc = None
         self._conn = None
@@ -160,18 +187,118 @@ class ProcessReplica:
             if not self.alive:
                 self._fail_locked()  # reap a dead process before respawn
                 self._start_locked()
-            try:
-                self._conn.send(msg)
-                reply = self._conn.recv()
-            except (EOFError, BrokenPipeError, ConnectionResetError, OSError) as e:
-                self._fail_locked()
-                raise ReplicaError(f"worker connection lost: {e!r}") from e
-            tag, payload = reply[0], reply[1]
-            if tag == "err":  # handler error; the worker itself is still up
-                raise ReplicaError(payload)
-            if len(reply) > 2 and reply[2]:
-                self._ingest(reply[2])
+                self._replay_warm_locked()
+            payload = self._roundtrip_locked(msg)
+            if self.record_warm and msg[0] in ("bool", "topk"):
+                self._record_warm_locked(msg)
             return payload
+
+    def _roundtrip_locked(self, msg):
+        try:
+            self._conn.send(msg)
+            reply = self._conn.recv()
+        except (EOFError, BrokenPipeError, ConnectionResetError, OSError) as e:
+            self._fail_locked()
+            raise ReplicaError(f"worker connection lost: {e!r}") from e
+        tag, payload = reply[0], reply[1]
+        if tag == "err":  # handler error; the worker itself is still up
+            raise ReplicaError(payload)
+        if len(reply) > 2 and reply[2]:
+            self._ingest(reply[2])
+        return payload
+
+    # ------------------------------------------------------------- warm log
+    @staticmethod
+    def _warm_key(msg):
+        """Dispatch-shape signature: the jit-specialization key of a message.
+
+        The worker's executables specialize on padded shapes — the boolean
+        probe on the (rows, terms) batch shape, the fused ranked kernel on
+        its (rows, terms, k) bucket — so one representative message per
+        signature covers the whole compile surface.
+        """
+        op = msg[0]
+        if op == "bool":
+            return ("bool",) + tuple(msg[1].shape)
+        if op == "topk":
+            items = msg[1]
+            return (
+                "topk",
+                len(items),
+                max((len(it[0]) for it in items), default=0),
+                tuple(sorted({int(it[2]) for it in items})),
+            )
+        return None
+
+    def _record_warm_locked(self, msg) -> None:
+        key = self._warm_key(msg)
+        if key is None:
+            return
+        self._warm_log.pop(key, None)
+        while len(self._warm_log) >= self._WARM_LIMIT:  # evict oldest shapes
+            self._warm_log.pop(next(iter(self._warm_log)))
+        self._warm_log[key] = msg[:2]  # ctx stripped: replay is untraced
+
+    def _replay_warm_locked(self) -> None:
+        """Replay the warm log into a freshly spawned worker (best-effort).
+
+        Runs after the ready handshake of every (re)spawn: the fresh
+        process re-traces each recorded dispatch shape — hitting the
+        persistent XLA compile cache instead of the compiler when one is
+        configured — so a respawned replica serves its first real request
+        re-jit-free.  A replay failure leaves the replica cold, not broken.
+        """
+        self.warm_replays = 0
+        for m in list(self._warm_log.values()):
+            try:
+                self._roundtrip_locked(m)
+                self.warm_replays += 1
+            except ReplicaError:
+                return
+
+    def export_warm(self) -> list:
+        """The warm log as JSON-able entries (Session.warm snapshotting)."""
+        with self._lock:
+            out = []
+            for m in self._warm_log.values():
+                if m[0] == "bool":
+                    out.append({"op": "bool", "q": np.asarray(m[1]).tolist()})
+                else:
+                    out.append(
+                        {
+                            "op": "topk",
+                            "items": [
+                                [
+                                    [int(t) for t in terms],
+                                    [int(t) for t in required],
+                                    int(k),
+                                    int(floor),
+                                ]
+                                for terms, required, k, floor in m[1]
+                            ],
+                        }
+                    )
+            return out
+
+    def preload_warm(self, entries: list) -> None:
+        """Seed the warm log from a persisted snapshot (before first spawn)."""
+        with self._lock:
+            for e in entries:
+                if e.get("op") == "bool":
+                    m = ("bool", np.asarray(e["q"], dtype=np.int32))
+                elif e.get("op") == "topk":
+                    m = (
+                        "topk",
+                        [
+                            (tuple(t), tuple(r), int(k), int(f))
+                            for t, r, k, f in e["items"]
+                        ],
+                    )
+                else:
+                    continue
+                key = self._warm_key(m)
+                if key is not None:
+                    self._warm_log[key] = m
 
     def _ingest(self, wire: dict) -> None:
         """Land a reply's shipped telemetry on the host obs handles."""

@@ -43,6 +43,7 @@ and burn-rate over a rolling window (obs/slo.py).
 from __future__ import annotations
 
 import itertools
+import json
 import os
 import threading
 import time
@@ -113,6 +114,7 @@ class Session:
         self._merge_us = self.metrics.histogram("sched.merge_us")
         self.slo = self.cfg.obs.slo if self.cfg.obs.slo is not None else SLOMonitor()
         self._trace_seq = itertools.count(1)  # trace ids for worker IPC
+        self._store_dir = store_dir  # warm-snapshot + compile-cache home
         self._groups = (
             replica_groups
             if replica_groups is not None
@@ -162,6 +164,12 @@ class Session:
         lb_tau = np.asarray(lb.tau)
         lb_backup = np.asarray(lb.backup_keys)
         global_dfs = np.asarray(eng._global_dfs)
+        # one shared persistent-compile-cache home per store: every worker of
+        # every (re)spawn deserializes executables the first run compiled
+        compile_cache_dir = sc.compile_cache_dir
+        if compile_cache_dir is None and sc.warm_snapshot:
+            compile_cache_dir = os.path.join(store_dir, "xla-compile-cache")
+        snapshot = self._load_warm_snapshot(store_dir) if sc.warm_snapshot else None
         groups = []
         for idx, ((lo, hi), sh) in enumerate(zip(eng._ranges, eng._shards)):
             if sh is None:
@@ -178,19 +186,25 @@ class Session:
                 "li_cfg": eng.li_cfg,
                 "cfg_kwargs": eng.cfg.worker_spec(),
                 "global_dfs": global_dfs,
+                "compile_cache_dir": compile_cache_dir,
             }
+            replicas = [
+                ProcessReplica(
+                    spec,
+                    spawn_timeout_s=sc.spawn_timeout_s,
+                    obs=eng.cfg.obs,
+                    label=f"shard{idx}/replica{j}",
+                    record_warm=sc.warm_snapshot,
+                )
+                for j in range(sc.n_replicas)
+            ]
+            if snapshot:
+                for r in replicas:
+                    r.preload_warm(snapshot)
             groups.append(
                 ReplicaGroup(
                     idx,
-                    [
-                        ProcessReplica(
-                            spec,
-                            spawn_timeout_s=sc.spawn_timeout_s,
-                            obs=eng.cfg.obs,
-                            label=f"shard{idx}/replica{j}",
-                        )
-                        for j in range(sc.n_replicas)
-                    ],
+                    replicas,
                     lo=lo,
                     n_docs=hi - lo,
                     retries=sc.worker_retries,
@@ -199,6 +213,41 @@ class Session:
                 )
             )
         return groups
+
+    @staticmethod
+    def _load_warm_snapshot(store_dir: str) -> list | None:
+        path = os.path.join(store_dir, "warm_snapshot.json")
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            entries = data.get("entries")
+            return entries or None
+        except (OSError, ValueError):
+            return None
+
+    def save_warm_snapshot(self) -> str | None:
+        """Persist the replicas' recorded warm traffic to the shard-store.
+
+        ``warm_snapshot.json`` holds one representative message per dispatch
+        shape any replica served; a *future* session over the same store
+        preloads it into fresh replicas, whose first spawn then replays the
+        previous run's whole compile surface against the persistent XLA
+        cache — warm across worker restarts *and* session restarts.
+        """
+        if self._store_dir is None:
+            return None
+        merged: dict = {}
+        for g in self._groups:
+            for r in g.replicas:
+                if isinstance(r, ProcessReplica):
+                    for e in r.export_warm():
+                        merged[json.dumps(e, sort_keys=True)] = e
+        if not merged:
+            return None
+        path = os.path.join(self._store_dir, "warm_snapshot.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "entries": list(merged.values())}, f)
+        return path
 
     def warm(self) -> None:
         """Force-spawn every process replica and pre-compile the batch shapes.
@@ -227,6 +276,8 @@ class Session:
             b = min(2 * b, self.sched_cfg.max_batch)
         if self.cfg.ranked.enabled and self.cfg.ranked.fused_kernel:
             self._warm_fused(replicas, t)
+        if self.sched_cfg.warm_snapshot and self.sched_cfg.n_replicas > 0:
+            self.save_warm_snapshot()
 
     def _warm_fused(self, replicas, t: int) -> None:
         """Pre-trigger the fused ranked kernel's row buckets on every replica.
@@ -423,19 +474,59 @@ class Session:
         back (None when nothing is listening, so the trace-off wire cost
         stays zero); inline replicas ignore the extra element.
         """
-        obs = self.cfg.obs
-        ctx = None
-        if obs.trace is not None or obs.probe_log is not None:
-            ctx = TraceContext(
-                trace_id=next(self._trace_seq),
-                trace=obs.trace is not None,
-                probe=obs.probe_log is not None,
-            )
-        msg = msg + (ctx,)
+        msg = msg + (self._trace_ctx(),)
         if len(self._groups) == 1:
             return [self._groups[0].call(msg)]
         futs = [self._fan.submit(g.call, msg) for g in self._groups]
         return [f.result() for f in futs]  # re-raises WorkerFailure
+
+    def _trace_ctx(self):
+        obs = self.cfg.obs
+        if obs.trace is None and obs.probe_log is None:
+            return None
+        return TraceContext(
+            trace_id=next(self._trace_seq),
+            trace=obs.trace is not None,
+            probe=obs.probe_log is not None,
+        )
+
+    def _ranked_forward_floors(self, batch, items, idxmap) -> list:
+        """Ranked fan-in with the global kth-score floor θ forwarded.
+
+        Groups run *sequentially* in ascending doc-range order; each later
+        group's items carry the merged running heap's kth score as a strict
+        floor, so its shards stop scoring candidates the global top-k
+        already excludes (shard heaps prune globally instead of
+        independently — the K>1 scored_fraction satellite).  Doc ranges
+        ascend and ties break by ascending id, so a later shard's tie can
+        never displace the heap: results stay bit-identical to the
+        concurrent floor-0 fan-out, which tests assert.
+        """
+        order = sorted(range(len(self._groups)), key=lambda g: self._groups[g].lo)
+        heaps: list = [None] * len(items)
+        for g in order:
+            group = self._groups[g]
+            sent = []
+            for n, (terms, req, k, _) in enumerate(items):
+                h = heaps[n]
+                floor = int(h.scores[k - 1]) if h is not None and len(h.scores) == k else 0
+                sent.append((terms, req, k, floor))
+            part = group.call(("topk", sent, self._trace_ctx()))
+            for n, (terms, req, k, _) in enumerate(items):
+                ids, scores = part[n]
+                if len(ids) == 0:
+                    continue
+                h = heaps[n]
+                if h is None:
+                    heaps[n] = select_topk(ids, scores, k)
+                else:
+                    heaps[n] = select_topk(
+                        np.concatenate([h.ids, ids]),
+                        np.concatenate([h.scores, scores]),
+                        k,
+                    )
+        empty = TopKResult(ids=np.zeros(0, np.int32), scores=np.zeros(0, np.int64))
+        return [h if h is not None else empty for h in heaps]
 
     def _timing(self, p: Pending, t0: float, phases: dict | None = None) -> dict:
         return {
@@ -501,23 +592,30 @@ class Session:
                     )
                 )
                 continue
-            # floor=0: shard heaps merge associatively, so replica groups can
-            # run concurrently — exactness never depended on floor forwarding
+            # floor=0 placeholder: _ranked_forward_floors rewrites it per
+            # group when SchedConfig.forward_floor shares the running global
+            # kth score across the fan-in (exactness never depends on it —
+            # shard heaps merge associatively — it only skips work)
             items.append((qp.terms, qp.required, int(p.req.k), 0))
             idxmap.append(j)
         if not items:
             return
+        forward = self.sched_cfg.forward_floor and len(self._groups) > 1
         t_x0 = time.monotonic()
         with trace.span("sched.dispatch", shards=len(self._groups), size=len(items)):
-            parts = self._fan_out(("topk", items))
+            if forward:
+                tops = self._ranked_forward_floors(batch, items, idxmap)
+            else:
+                parts = self._fan_out(("topk", items))
         t_x1 = time.monotonic()
         with trace.span("sched.merge"):
-            tops = []
-            for n, j in enumerate(idxmap):
-                p = batch[j]
-                ids = np.concatenate([part[n][0] for part in parts])
-                scores = np.concatenate([part[n][1] for part in parts])
-                tops.append(select_topk(ids, scores, int(p.req.k)))
+            if not forward:
+                tops = []
+                for n, j in enumerate(idxmap):
+                    p = batch[j]
+                    ids = np.concatenate([part[n][0] for part in parts])
+                    scores = np.concatenate([part[n][1] for part in parts])
+                    tops.append(select_topk(ids, scores, int(p.req.k)))
         phases = self._phase_marks(t0, t_x0, t_x1)
         for top, j in zip(tops, idxmap):
             p = batch[j]

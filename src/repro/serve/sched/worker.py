@@ -17,9 +17,20 @@ Protocol (request/response over one ``multiprocessing.Pipe``):
   ("ping",)                       -> ("ok", "pong") — forces spawn/warm
   ("clock",)                      -> ("ok", perf_counter_ns) — offset sync
   ("stats",)                      -> ("ok", shard metrics snapshot)
+  ("caches",)                     -> ("ok", cache_report) — jit-cache sizes,
+                                  observed fused shapes and arena counters;
+                                  the warm-snapshot tests read this to prove
+                                  a respawned worker is re-jit-free
   ("crash",)                      hard-exits the process (crash-path tests)
   ("stop",)                       clean shutdown
   ("err", traceback_str)          any handler failure (worker stays alive)
+
+When the spec carries ``compile_cache_dir`` the worker points JAX's
+persistent compilation cache there before building its engine (best-effort
+— an old jax without the knobs just stays in-memory).  Every worker of
+every (re)spawn shares that directory, so the warm-log replay a fresh
+process receives (sched/replica.py) re-traces against executables already
+on disk instead of re-invoking XLA.
 
 ``ctx`` is an optional ``repro.obs.TraceContext``: when present the reply
 grows a third element, ``("ok", payload, {"spans": [...], "probes": [...]})``
@@ -89,6 +100,50 @@ def execute_topk(shard, items: list) -> list:
     return out
 
 
+def cache_report(shard) -> dict:
+    """Compiled-executable census for one engine: the warm-restore probe.
+
+    ``dense_cache`` / ``dense_shapes`` cover the fused ranked kernel's jit
+    cache in *this* process; ``arena`` is the device-arena residency
+    counters (uploads must stay at 1 per process no matter how many
+    dispatches ran).  Inline replicas report the same shape.
+    """
+    from repro.kernels.fused_query import dense
+
+    arena = getattr(getattr(shard, "_ranked", None), "_arena", None) or None
+    return {
+        "dense_cache": dense.cache_size(),
+        "dense_shapes": sorted(dense.observed_shapes()),
+        "arena": arena.counters.as_dict() if arena else None,
+    }
+
+
+def _configure_compile_cache(cache_dir: str | None) -> None:
+    """Point JAX's persistent compilation cache at the shard-store (best
+    effort): respawned workers then deserialize executables instead of
+    recompiling them during the warm-log replay."""
+    if not cache_dir:
+        return
+    try:
+        import jax
+
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        for knob, val in (
+            # CPU-backend kernels compile fast/small; without zeroing the
+            # thresholds the cache would skip exactly the executables the
+            # respawn replay wants back
+            ("jax_persistent_cache_min_compile_time_secs", 0.0),
+            ("jax_persistent_cache_min_entry_size_bytes", 0),
+        ):
+            try:
+                jax.config.update(knob, val)
+            except Exception:
+                pass
+    except Exception:
+        pass
+
+
 def _build_shard(spec: dict):
     """Reconstruct the spec'd ShardEngine from the persistent shard-store."""
     from repro.core.learned_bloom import LearnedBloom
@@ -120,6 +175,7 @@ def worker_main(conn, spec: dict) -> None:
     from repro.obs.trace import Tracer
 
     try:
+        _configure_compile_cache(spec.get("compile_cache_dir"))
         shard, cfg = _build_shard(spec)
         # in-memory probe sink, installed before the engine's first probe
         # (GuidedPostings captures the handle lazily); drained per request
@@ -169,6 +225,8 @@ def worker_main(conn, spec: dict) -> None:
                     conn.send(("ok", payload, wire))
             elif op == "stats":
                 conn.send(("ok", shard.metrics.snapshot()))
+            elif op == "caches":
+                conn.send(("ok", cache_report(shard)))
             else:
                 conn.send(("err", f"unknown op {op!r}"))
         except Exception:

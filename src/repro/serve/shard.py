@@ -476,6 +476,15 @@ class ShardEngine:
                 lambda: self.ranked_stats.as_dict() if self.ranked_stats.queries else None,
                 reset=lambda: setattr(self, "ranked_stats", RankedStats()),
             )
+            reg.register(
+                "arena",
+                lambda: (
+                    self._ranked._arena.counters.as_dict()
+                    if self._ranked is not None
+                    and getattr(self._ranked, "_arena", None)
+                    else None
+                ),
+            )
             self._metrics = reg
         return reg
 
@@ -505,6 +514,7 @@ class _RankedSource:
     def __init__(self, shard: ShardEngine):
         self._sh = shard
         self._store = shard.tier2
+        self._arena = None  # lazy DeviceArena (False = checked, ineligible)
 
     def n(self, t: int) -> int:
         return int(self._sh._dfs[t])
@@ -542,6 +552,31 @@ class _RankedSource:
         return found, q
 
     # ---- fused-kernel extensions (kernels.fused_query.ops) ----
+    @property
+    def arena(self):
+        """This shard's device-resident impact arena, or None.
+
+        Built lazily on the first fused dispatch that could use it (decode +
+        upload is startup cost, not serving) and cached for the shard's
+        lifetime — the zero-re-upload property the residence test asserts.
+        ``False`` caches a failed eligibility check so it runs once.
+        """
+        if self._arena is None:
+            from repro.kernels.arena import DeviceArena
+
+            cfg = getattr(self._sh.cfg, "ranked", None)
+            if (
+                cfg is None
+                or not getattr(cfg, "device_arena", False)
+                or not DeviceArena.eligible(self._store.n_terms, self._sh.n_docs)
+            ):
+                self._arena = False
+            else:
+                self._arena = DeviceArena.build(
+                    self, self._store.n_terms, self._sh.n_docs
+                )
+        return self._arena or None
+
     @property
     def payload_bits(self) -> int:
         """Quantized-impact width — static per store, so per kernel dispatch."""

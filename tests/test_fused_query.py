@@ -300,3 +300,39 @@ def test_fused_kernel_flat_kwarg_forwards():
     # process replicas must inherit the flag through the picklable spec
     spec = ServeConfig(ranked=dict(fused_kernel=True)).worker_spec()
     assert spec["ranked"].fused_kernel is True
+
+
+# ----------------------------------------------------------- arena residence
+def test_arena_residence_zero_reuploads(system, engines):
+    """The impact table is uploaded once per shard per process: repeated
+    dispatches hit the resident buffers, uploads/upload_bytes never move."""
+    eng = engines[(True, 1)]
+    _, inv, *_ = system
+    q, _ = zipf_disjunctions(inv.dfs, 16, seed=6)
+    eng.query_topk(q, K)  # builds the arena lazily on the first fused use
+    sh = eng.shards[0]
+    snap0 = sh.metrics.snapshot()["arena"]
+    assert snap0 is not None
+    assert snap0["uploads"] == 1 and snap0["upload_bytes"] > 0
+    for _ in range(3):
+        eng.query_topk(q, K)
+    snap1 = sh.metrics.snapshot()["arena"]
+    assert snap1["uploads"] == 1
+    assert snap1["upload_bytes"] == snap0["upload_bytes"]
+    assert snap1["hits"] > snap0["hits"]
+
+
+def test_arena_disabled_by_config(system):
+    """ranked.device_arena=False routes every item down the legacy peel path
+    (no arena is ever built) and stays bit-identical."""
+    _, inv, li, lb, _ = system
+    cfg = ServeConfig(
+        n_shards=1,
+        ranked=dict(fused_kernel=True, topk_exhaustive_cutoff=0, device_arena=False),
+    )
+    eng = BooleanEngine(lb, inv, li, cfg)
+    q, _ = zipf_disjunctions(inv.dfs, 12, seed=7)
+    want = _shared_engines()[(False, 1)].query_topk(q, K)
+    got = eng.query_topk(q, K)
+    _check(got, want, "device_arena=False must stay bit-identical")
+    assert eng.shards[0].metrics.snapshot().get("arena") is None

@@ -499,3 +499,117 @@ def test_worker_spec_round_trips_engine_flags():
     assert clone.ranked.payload_bits == 4
     assert clone.obs.trace is None  # worker builds its own obs
     assert clone.sched.n_replicas == 0  # workers execute; the session schedules
+
+
+def test_coalesce_window_lingers_for_stragglers():
+    """coalesce_us holds a non-full batch open so near-simultaneous arrivals
+    ride the same dispatch."""
+    queue = AdmissionQueue(
+        SchedConfig(max_batch=8, max_queue=16, coalesce_us=200_000), Registry()
+    )
+    queue.offer(_pending())
+
+    def late():
+        time.sleep(0.03)
+        queue.offer(_pending())
+        queue.offer(_pending())
+
+    t = threading.Thread(target=late)
+    t.start()
+    t0 = time.monotonic()
+    batch = queue.take_batch(8)
+    t.join()
+    assert len(batch) == 3  # the stragglers made it into the lingering batch
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_coalesce_window_anchored_to_head_submit_time():
+    """The window is measured from the head's submit, not from take_batch:
+    a batch that already aged while runners were busy dispatches at once."""
+    queue = AdmissionQueue(
+        SchedConfig(max_batch=8, max_queue=16, coalesce_us=150_000), Registry()
+    )
+    p = _pending()
+    p.t_submit = time.monotonic() - 1.0  # aged in queue during a busy spell
+    queue.offer(p)
+    t0 = time.monotonic()
+    assert len(queue.take_batch(8)) == 1
+    assert time.monotonic() - t0 < 0.05  # no linger added on top of the age
+
+
+# ------------------------------------------------------- ranked floor fan-in
+def test_ranked_floor_forwarding_bit_identical(system):
+    """forward_floor shares the running global kth score across the shard
+    fan-in; it must only skip work, never change results."""
+    _, rq = _queries(system)
+    eng_f = _engine(system, n_shards=3, sched=dict(forward_floor=True))
+    eng_0 = _engine(system, n_shards=3, sched=dict(forward_floor=False))
+    want = eng_0.query_topk(rq, k=3, mode="or")  # engine facade reference
+    with Session(eng_f) as sf, Session(eng_0) as s0:
+        floors_sent = []
+        for g in sf._groups:
+            def wrap(msg, _orig=g.call):
+                if msg[0] == "topk":
+                    floors_sent.append([it[3] for it in msg[1]])
+                return _orig(msg)
+            g.call = wrap
+        got_f = sf.query_topk(rq, k=3)
+        got_0 = s0.query_topk(rq, k=3)
+    for a, b, c in zip(got_f, got_0, want):
+        assert np.array_equal(a.ids, b.ids) and np.array_equal(a.scores, b.scores)
+        assert np.array_equal(a.ids, c.ids) and np.array_equal(a.scores, c.scores)
+    # later groups in the sequential fan-in actually saw a raised floor
+    assert any(f > 0 for fl in floors_sent for f in fl)
+
+
+# ------------------------------------------------------------- warm snapshot
+def test_warm_snapshot_respawn_bit_identical_and_re_jit_free(system, tmp_path):
+    """A crashed worker's replacement replays the recorded warm log against
+    the persistent compile cache: same jit cache, same shapes, same bits."""
+    eng = _engine(
+        system,
+        n_shards=1,
+        ranked=dict(fused_kernel=True),
+        sched=dict(n_replicas=1),
+    )
+    _, rq = _queries(system)
+    with Session(eng, store_dir=str(tmp_path)) as s:
+        s.warm()
+        want = s.query_topk(rq, k=5)
+        rep = s._groups[0].replicas[0]
+        before = rep.call(("caches",))
+        assert before["dense_cache"] > 0 and before["dense_shapes"]
+        assert before["arena"]["uploads"] == 1
+        with pytest.raises(ReplicaError):
+            rep.call(("crash",))
+        after = rep.call(("caches",))  # respawn + warm-log replay first
+        assert rep.warm_replays > 0 and rep.clock_syncs == 2
+        assert after["dense_cache"] == before["dense_cache"]
+        assert after["dense_shapes"] == before["dense_shapes"]
+        got = s.query_topk(rq, k=5)
+        post = rep.call(("caches",))
+        # re-jit-free: serving the same shapes compiled nothing new
+        assert post["dense_cache"] == after["dense_cache"]
+        assert post["dense_shapes"] == after["dense_shapes"]
+        for a, b in zip(want, got):
+            assert np.array_equal(a.ids, b.ids)
+            assert np.array_equal(a.scores, b.scores)
+    assert (tmp_path / "warm_snapshot.json").exists()
+    assert (tmp_path / "xla-compile-cache").is_dir()
+    # a brand-new session over the same store preloads the snapshot, so its
+    # first spawn replays the previous run's whole shape coverage
+    eng2 = _engine(
+        system,
+        n_shards=1,
+        ranked=dict(fused_kernel=True),
+        sched=dict(n_replicas=1),
+    )
+    with Session(eng2, store_dir=str(tmp_path)) as s2:
+        rep2 = s2._groups[0].replicas[0]
+        assert len(rep2._warm_log) > 0  # seeded before the first spawn
+        rep2.call(("ping",))
+        assert rep2.warm_replays > 0
+        got2 = s2.query_topk(rq, k=5)
+        for a, b in zip(want, got2):
+            assert np.array_equal(a.ids, b.ids)
+            assert np.array_equal(a.scores, b.scores)
